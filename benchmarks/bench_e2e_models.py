@@ -1,0 +1,34 @@
+"""Table 9: end-to-end transformer speedups vs baselines (incl. the
+published TiC-SAT / SMAUG comparison rows)."""
+from repro.accesys import workloads as W
+from repro.accesys.system import (SMAUG_SPEEDUP, TICSAT_SPEEDUP,
+                                  default_system, run_transformer_accel,
+                                  run_transformer_cpu)
+from repro.accesys.calibration import PAPER_TABLE9
+from benchmarks.common import emit
+
+
+def main():
+    rows = []
+    for name, paper in PAPER_TABLE9.items():
+        wl = W.transformer_trace(name)
+        acc = run_transformer_accel(default_system("DC"), wl)
+        base = run_transformer_cpu(wl)
+        mt = run_transformer_cpu(wl, threads=256)
+        sp = base.total_s / acc.total_s
+        rows.append((f"{name}.matrixflow", round(acc.total_s * 1e6, 1),
+                     f"speedup={sp:.1f}x;paper={paper};"
+                     f"err={abs(sp-paper)/paper*100:.1f}%"))
+        rows.append((f"{name}.multithread", round(mt.total_s * 1e6, 1),
+                     f"speedup={base.total_s/mt.total_s:.1f}x"))
+        if name in TICSAT_SPEEDUP:
+            rows.append((f"{name}.ticsat", "-",
+                         f"published_speedup={TICSAT_SPEEDUP[name]}x"))
+        if name in SMAUG_SPEEDUP:
+            rows.append((f"{name}.smaug", "-",
+                         f"published_speedup={SMAUG_SPEEDUP[name]}x"))
+    emit(rows, "table9_e2e")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 7a: 512x512 GEMM throughput across data precisions & platforms."""
+from repro.accesys.pipeline import simulate_gemm
+from repro.accesys.system import CPUModel, default_system
+from benchmarks.common import emit
+
+
+def main():
+    cpu = CPUModel()
+    rows = []
+    for dtype in ("int8", "int16", "int32", "fp16", "fp32"):
+        n = 512
+        macs = n ** 3
+        base = cpu.gemm_time(macs, dtype)
+        for name, t in [
+            ("cpu1", base),
+            ("omp256", cpu.gemm_time(macs, dtype, threads=256)),
+            ("neon", cpu.gemm_time(macs, dtype, simd=True)),
+            ("matrixflow_dc", simulate_gemm(
+                default_system("DC", dtype=dtype), n, n, n).total_s),
+            ("matrixflow_dm", simulate_gemm(
+                default_system("DM", dtype=dtype), n, n, n).total_s),
+        ]:
+            rows.append((f"{dtype}.{name}", round(t * 1e6, 3),
+                         f"speedup={base / t:.1f}x"))
+    emit(rows, "fig7a_gemm_precision")
+
+
+if __name__ == "__main__":
+    main()

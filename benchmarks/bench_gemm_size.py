@@ -1,0 +1,25 @@
+"""Fig. 7b: INT8 GEMM speedup vs matrix size (DC/DM/OMP/Neon)."""
+from repro.accesys.pipeline import simulate_gemm
+from repro.accesys.system import CPUModel, default_system
+from benchmarks.common import emit
+
+
+def main():
+    cpu = CPUModel()
+    rows = []
+    for n in (256, 512, 1024, 2048):
+        base = cpu.gemm_time(n ** 3, "int8")
+        dc = simulate_gemm(default_system("DC"), n, n, n).total_s
+        dm = simulate_gemm(default_system("DM"), n, n, n).total_s
+        omp = cpu.gemm_time(n ** 3, "int8", threads=256)
+        neon = cpu.gemm_time(n ** 3, "int8", simd=True)
+        rows += [(f"n{n}.dc", round(dc * 1e6, 2), f"speedup={base/dc:.0f}x"),
+                 (f"n{n}.dm", round(dm * 1e6, 2), f"speedup={base/dm:.0f}x"),
+                 (f"n{n}.omp", round(omp * 1e6, 2), f"speedup={base/omp:.1f}x"),
+                 (f"n{n}.neon", round(neon * 1e6, 2),
+                  f"speedup={base/neon:.1f}x")]
+    emit(rows, "fig7b_gemm_size")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 12 (+ wall-clock paragraph): memory locations × interconnects."""
+from repro.accesys import workloads as W
+from repro.accesys.components import DRAM
+from repro.accesys.system import (default_system, pcie_for_bw,
+                                  run_transformer_accel)
+from benchmarks.common import emit
+
+
+def main():
+    rows = []
+    for model in ("vit-base-16", "vit-large-16", "vit-huge-14"):
+        wl = W.transformer_trace(model)
+        ts = {}
+        for bw in (2, 8, 64):
+            ts[bw] = run_transformer_accel(
+                default_system("DC", pcie=pcie_for_bw(bw)), wl).total_s
+        dev = run_transformer_accel(
+            default_system("DevMem", dram=DRAM("HBM2"),
+                           pcie=pcie_for_bw(64)), wl).total_s
+        for bw, t in ts.items():
+            rows.append((f"{model}.host{bw}GBs", round(t * 1e6, 1),
+                         f"norm_vs_2GBs={ts[2] / t:.2f}x"))
+        rows.append((f"{model}.devmem_hbm2", round(dev * 1e6, 1),
+                     f"host64_vs_devmem={dev / ts[64]:.2f}x"))
+    emit(rows, "fig12_interconnect")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Fig. 11 / Table 7: five DRAM technologies, device- vs host-attached."""
+from repro.accesys.components import DRAM, DRAM_TECH
+from repro.accesys.pipeline import simulate_gemm
+from repro.accesys.system import default_system
+from benchmarks.common import emit
+
+
+def main():
+    rows = []
+    for tech in DRAM_TECH:
+        dev = simulate_gemm(default_system("DevMem", dram=DRAM(tech),
+                                           dtype="int32"),
+                            2048, 2048, 2048).total_s
+        host = simulate_gemm(default_system("DM", dram=DRAM(tech),
+                                            dtype="int32"),
+                             2048, 2048, 2048).total_s
+        rows.append((f"{tech}.device", round(dev * 1e6, 1),
+                     f"bw={DRAM_TECH[tech][2]/1e9:.1f}GB/s"))
+        rows.append((f"{tech}.host", round(host * 1e6, 1),
+                     f"device_advantage={host / dev:.2f}x"))
+    emit(rows, "fig11_memory_tech")
+
+
+if __name__ == "__main__":
+    main()

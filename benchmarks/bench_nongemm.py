@@ -1,0 +1,32 @@
+"""Fig. 13: performance vs non-GEMM fraction, host links vs DevMem."""
+from repro.accesys import workloads as W
+from repro.accesys.calibration import nongemm_crossover, scale_nongemm
+from repro.accesys.components import DRAM
+from repro.accesys.system import (default_system, pcie_for_bw,
+                                  run_transformer_accel)
+from benchmarks.common import emit
+
+
+def main():
+    rows = []
+    wl = W.transformer_trace("vit-base-16")
+    for frac in (0.05, 0.2, 0.35, 0.5, 0.65):
+        scaled = scale_nongemm(wl, frac)
+        dev = run_transformer_accel(
+            default_system("DevMem", dtype="int32", dram=DRAM("HBM2")),
+            scaled).total_s
+        for bw in (8, 64):
+            host = run_transformer_accel(
+                default_system("DC", dtype="int32",
+                               pcie=pcie_for_bw(bw)), scaled).total_s
+            rows.append((f"frac{frac}.host{bw}GBs",
+                         round(host * 1e6, 1),
+                         f"norm_vs_devmem={dev / host:.3f}"))
+    for bw in (64, 8, 2):
+        rows.append((f"crossover.bw{bw}GBs", "-",
+                     f"crossover_frac={nongemm_crossover(bw):.3f}"))
+    emit(rows, "fig13_nongemm")
+
+
+if __name__ == "__main__":
+    main()

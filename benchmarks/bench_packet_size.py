@@ -1,0 +1,23 @@
+"""Fig. 10: execution time vs PCIe packet size for several link speeds;
+the 256 B optimum and the 4096 B stall at low speeds."""
+from repro.accesys.pipeline import simulate_gemm
+from repro.accesys.system import default_system, pcie_for_bw
+from benchmarks.common import emit
+
+
+def main():
+    rows = []
+    for gb_s in (2, 8, 32, 64):
+        ts = {}
+        for pkt in (64, 128, 256, 512, 1024, 4096):
+            cfg = default_system("DM", pcie=pcie_for_bw(gb_s, packet=pkt))
+            ts[pkt] = simulate_gemm(cfg, 2048, 2048, 2048).total_s
+        best = min(ts, key=ts.get)
+        for pkt, t in ts.items():
+            rows.append((f"bw{gb_s}GBs.pkt{pkt}", round(t * 1e6, 1),
+                         f"vs_256B={t / ts[256]:.3f};best={best}"))
+    emit(rows, "fig10_packet_size")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fig. 9: execution time vs ideal accelerator compute throughput — the
+curve flattens once the memory/interconnect roof binds."""
+import dataclasses
+
+from repro.accesys.components import SystolicArray, SA_VARIANTS
+from repro.accesys.pipeline import simulate_gemm
+from repro.accesys.system import default_system
+from benchmarks.common import emit
+
+
+def main():
+    rows = []
+    base = None
+    # scale the array's clock to sweep "ideal compute throughput"
+    for scale in (0.25, 0.5, 1, 2, 4, 8, 16):
+        key = ("int8", 16)
+        freq, area, power, gops = SA_VARIANTS[key]
+        SA_VARIANTS[key] = (freq * scale, area, power, gops * scale)
+        try:
+            cfg = default_system("DC")
+            t = simulate_gemm(cfg, 2048, 2048, 2048).total_s
+        finally:
+            SA_VARIANTS[key] = (freq, area, power, gops)
+        base = base or t
+        rows.append((f"compute_x{scale}", round(t * 1e6, 1),
+                     f"speedup_vs_x0.25={base / t:.2f}x"))
+    emit(rows, "fig9_roofline")
+
+
+if __name__ == "__main__":
+    main()

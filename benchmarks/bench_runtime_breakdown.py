@@ -1,0 +1,28 @@
+"""Fig. 8: end-to-end runtime breakdown by operation class (ViT-Base)."""
+from repro.accesys import workloads as W
+from repro.accesys.system import (CPUModel, default_system,
+                                  run_transformer_accel,
+                                  run_transformer_cpu)
+from benchmarks.common import emit
+
+
+def main():
+    wl = W.transformer_trace("vit-base-16")
+    rows = []
+    base = run_transformer_cpu(wl)
+    for k, v in base.breakdown().items():
+        rows.append((f"cpu1.{k}", round(base.total_s * v * 1e6, 1),
+                     f"share={v:.3f}"))
+    neon = run_transformer_cpu(wl, simd=True)
+    for k, v in neon.breakdown().items():
+        rows.append((f"neon.{k}", round(neon.total_s * v * 1e6, 1),
+                     f"share={v:.3f}"))
+    acc = run_transformer_accel(default_system("DC"), wl)
+    for k, v in acc.breakdown().items():
+        rows.append((f"matrixflow.{k}", round(acc.total_s * v * 1e6, 1),
+                     f"share={v:.3f}"))
+    emit(rows, "fig8_runtime_breakdown")
+
+
+if __name__ == "__main__":
+    main()

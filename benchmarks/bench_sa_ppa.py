@@ -1,0 +1,18 @@
+"""Table 6: systolic-array PPA + derived efficiency (static data check)."""
+from repro.accesys.components import SA_VARIANTS
+from benchmarks.common import emit
+
+
+def main():
+    rows = []
+    for (dtype, w), (freq, area, power, gops) in SA_VARIANTS.items():
+        gops_per_w = gops / (power / 1000.0)
+        rows.append((f"{dtype}_{w}x{w}", "-",
+                     f"freq={freq/1e9:.2f}GHz;area_um2={area};"
+                     f"power_mW={power};peak={gops}GOPS;"
+                     f"GOPS_per_W={gops_per_w:.0f}"))
+    emit(rows, "table6_sa_ppa")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Measured serving throughput of the continuous-batching engine on a
+reduced model (real wall-clock on this host)."""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.model import Model
+from repro.serving.engine import Request, ServingEngine
+from benchmarks.common import emit
+
+
+def main():
+    cfg = get_reduced("qwen2_0_5b")
+    params = Model(cfg, remat="none").init(jax.random.PRNGKey(0))
+    rows = []
+    for slots in (1, 4):
+        rng = np.random.default_rng(0)
+        eng = ServingEngine(cfg, params, slots=slots, max_seq=96)
+        for i in range(8):
+            eng.submit(Request(
+                uid=i, prompt=rng.integers(1, 250, size=8).astype(np.int32),
+                max_new_tokens=8))
+        st = eng.run_until_drained()
+        rows.append((f"slots{slots}", round(st.wall_s * 1e6, 0),
+                     f"tokens_per_s={st.tokens_per_s:.1f};"
+                     f"decode_steps={st.decode_steps}"))
+    emit(rows, "serving_throughput")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Shared benchmark plumbing: CSV emission per the harness contract
+(``name,us_per_call,derived``)."""
+import csv
+import os
+import sys
+import time
+from pathlib import Path
+
+OUTDIR = Path(os.environ.get("REPRO_BENCH_OUT", "artifacts/bench"))
+
+
+def emit(rows, table_name):
+    OUTDIR.mkdir(parents=True, exist_ok=True)
+    path = OUTDIR / f"{table_name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["name", "us_per_call", "derived"])
+        for r in rows:
+            w.writerow(r)
+    for r in rows:
+        print(f"{table_name}.{r[0]},{r[1]},{r[2]}")
+    return path
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out

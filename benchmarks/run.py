@@ -1,0 +1,41 @@
+"""One benchmark per paper table/figure. Prints ``name,us_per_call,
+derived`` CSV rows and writes artifacts/bench/*.csv."""
+import importlib
+import sys
+import time
+
+MODULES = [
+    "bench_sa_ppa",            # Table 6
+    "bench_gemm_precision",    # Fig 7a
+    "bench_gemm_size",         # Fig 7b
+    "bench_runtime_breakdown", # Fig 8
+    "bench_roofline",          # Fig 9
+    "bench_packet_size",       # Fig 10
+    "bench_memory_tech",       # Fig 11 / Table 7
+    "bench_interconnect",      # Fig 12
+    "bench_nongemm",           # Fig 13
+    "bench_tlb",               # Table 8
+    "bench_e2e_models",        # Table 9
+    "bench_kernels",           # Eq. 1 + streaming attention (wall-clock)
+    "bench_serving",           # engine throughput (wall-clock)
+]
+
+
+def main() -> None:
+    t0 = time.time()
+    failures = []
+    for name in MODULES:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},ERROR,{e!r}", flush=True)
+    print(f"# done in {time.time()-t0:.1f}s; {len(failures)} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

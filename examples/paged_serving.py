@@ -1,0 +1,56 @@
+"""Paged-KV decode with the SMMU-style Pallas kernel: allocate a page
+pool, fill it from mixed-length sequences, and decode through
+``kernels.paged_attention`` (interpret mode on CPU) — verifying against
+contiguous attention.
+
+    PYTHONPATH=src python examples/paged_serving.py
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import paged_attention
+from repro.models.layers import decode_attention
+from repro.serving.kv_cache import PagedCacheConfig, PagedKVCache
+
+
+def main():
+    cfg = PagedCacheConfig(n_pages=64, page_tokens=16, n_kv_heads=2,
+                           head_dim=32, max_pages_per_seq=8,
+                           dtype="float32")
+    cache = PagedKVCache(cfg, max_seqs=3)
+    rng = jax.random.PRNGKey(0)
+    lens = [23, 57, 100]
+    for slot, T in enumerate(lens):
+        assert cache.alloc_seq(slot, T)
+        k = jax.random.normal(jax.random.fold_in(rng, slot),
+                              (T, 2, 32), jnp.float32)
+        cache.write_prompt(slot, k, k * 0.5)
+    print(f"pool: {cache.pages_in_use}/{cfg.n_pages} pages in use "
+          f"({cfg.page_bytes}B per K page)")
+
+    slots = np.arange(3)
+    q = jax.random.normal(jax.random.PRNGKey(9), (3, 8, 32), jnp.float32)
+    kp, vp, table, lens_dev = cache.device_views(slots)
+    out = paged_attention(q, kp, vp, table, lens_dev, interpret=True)
+
+    # oracle: gather pages into contiguous caches
+    k = kp[table].reshape(3, -1, 2, 32)
+    v = vp[table].reshape(3, -1, 2, 32)
+    want = decode_attention(q, k, v, lens_dev)
+    err = float(jnp.abs(out - want).max())
+    print(f"paged kernel vs contiguous attention: max |err| = {err:.2e}")
+    assert err < 1e-4
+    # append a decode step's KV and grow across a page boundary
+    cache.append_token(slots, q[:, :2], q[:, :2] * 0.5)
+    print(f"after append: lens={cache.lens[:3].tolist()} "
+          f"pages={cache.pages_in_use}")
+    print("page-table indirection == the paper's SMMU, serving edition.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.accesys import components, pipeline, system, workloads  # noqa: F401

@@ -1,0 +1,229 @@
+"""Gem5-AcceSys analogue — component models.
+
+Cycle-calibrated (not cycle-accurate) models of every box in the paper's
+Fig. 1: the PCIe link with TLP packetization, the multi-channel DMA
+engine, the SMMU (64-entry TLB + page walker), DRAM technologies
+(Table 7), the LLC for DC mode, and the MatrixFlow systolic array
+(Table 6). The pipeline simulator in ``pipeline.py`` composes them over
+the tile schedule from ``core.streaming``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+# ----------------------------------------------------------------- SA
+# Table 6 (post-synthesis PPA; fixed-point @1 GHz, floating @0.6 GHz)
+SA_VARIANTS = {
+    # name: (freq_hz, area_um2, power_mw, peak_gops)
+    ("int8", 4): (1.0e9, 16_186, 7.464, 32.0),
+    ("int8", 16): (1.0e9, 186_875, 84.550, 512.0),
+    ("int16", 4): (1.0e9, 24_989, 11.813, 32.0),
+    ("int16", 16): (1.0e9, 397_558, 149.419, 512.0),
+    ("int32", 4): (1.0e9, 73_483, 33.302, 32.0),
+    ("int32", 16): (1.0e9, 1_163_841, 392.978, 512.0),
+    ("fp8", 4): (0.6e9, 8_806, 2.251, 19.2),
+    ("fp8", 16): (0.6e9, 142_816, 34.557, 307.2),
+    ("fp16", 4): (0.6e9, 22_802, 5.580, 19.2),
+    ("fp16", 16): (0.6e9, 363_805, 83.655, 307.2),
+    ("fp32", 4): (0.6e9, 62_693, 16.938, 19.2),
+    ("fp32", 16): (0.6e9, 1_032_820, 258.173, 307.2),
+}
+
+DTYPE_BYTES = {"int8": 1, "int16": 2, "int32": 4,
+               "fp8": 1, "fp16": 2, "fp32": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class SystolicArray:
+    dtype: str = "int8"
+    w: int = 16
+
+    @property
+    def freq(self) -> float:
+        return SA_VARIANTS[(self.dtype, self.w)][0]
+
+    @property
+    def peak_gops(self) -> float:
+        return SA_VARIANTS[(self.dtype, self.w)][3]
+
+    def tile_cycles(self, l: int) -> int:
+        """Output-stationary W×W tile over depth l: l + fill/drain."""
+        return l + 2 * (self.w - 1)
+
+    def tile_time(self, l: int) -> float:
+        return self.tile_cycles(l) / self.freq
+
+
+# ---------------------------------------------------------------- PCIe
+@dataclasses.dataclass(frozen=True)
+class PCIeLink:
+    """lanes × gbps_per_lane with TLP packetization effects (Fig. 10).
+
+    efficiency(packet): payload / (payload + header) captures the 64 B
+    penalty; an on-chip TLP pipeline depth limits outstanding packets, so
+    very large TLPs (4096 B) stall the pipeline when serialization time
+    exceeds the window — worst at low link speeds (paper: +36 %)."""
+    lanes: int = 16
+    gbps_per_lane: float = 64.0      # Gen6 ×16 = 128 GB/s (paper baseline)
+    packet_bytes: int = 256
+    header_bytes: int = 26          # TLP+DLLP+framing overhead
+    pipeline_ns: float = 180.0      # per-TLP processing window
+    encoding: float = 128.0 / 130.0
+
+    @property
+    def raw_bw(self) -> float:      # B/s, one direction
+        return self.lanes * self.gbps_per_lane * 1e9 / 8 * self.encoding
+
+    def efficiency(self) -> float:
+        p = self.packet_bytes
+        payload_eff = p / (p + self.header_bytes)
+        # serialization of one TLP vs the pipeline window: once a packet
+        # takes longer than the window, the link pipeline bubbles
+        ser_ns = (p + self.header_bytes) / self.raw_bw * 1e9
+        stall = max(0.0, ser_ns - self.pipeline_ns) / max(ser_ns, 1e-9)
+        return payload_eff * (1.0 - 0.55 * stall)
+
+    @property
+    def effective_bw(self) -> float:
+        return self.raw_bw * self.efficiency()
+
+    def transfer_time(self, nbytes: int) -> float:
+        return nbytes / self.effective_bw
+
+
+# ---------------------------------------------------------------- DRAM
+# Table 7: tech -> (channels, data_width_bits, bandwidth B/s, data rate)
+DRAM_TECH = {
+    "DDR3": (1, 64, 12.8e9, 1600),
+    "DDR4": (1, 64, 19.2e9, 2400),
+    "DDR5": (2, 32, 25.6e9, 3200),
+    "GDDR6": (2, 64, 32.0e9, 2000),
+    "HBM2": (2, 128, 64.0e9, 2000),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAM:
+    tech: str = "DDR3"
+    latency_ns: float = 12.0
+    stream_efficiency: float = 0.87     # bank/queueing losses on bursts
+
+    @property
+    def bandwidth(self) -> float:
+        return DRAM_TECH[self.tech][2]
+
+    def transfer_time(self, nbytes: int) -> float:
+        return self.latency_ns * 1e-9 + \
+            nbytes / (self.bandwidth * self.stream_efficiency)
+
+
+# ---------------------------------------------------------------- SMMU
+@dataclasses.dataclass
+class SMMU:
+    """Two-level TLB + walk cache + page walker (Table 8).
+
+    The 64-entry uTLB backs onto a larger L2 TLB: most uTLB misses fill
+    from L2 / the walk cache in ~10–25 cycles (the paper's mean
+    translation times), and only L2 misses pay a full multi-level walk
+    (~180–368 cycles, deeper as the footprint outgrows the reach)."""
+    tlb_entries: int = 64
+    l2_entries: int = 8192
+    l2_fill_cycles: float = 12.0
+    base_walk_cycles: float = 180.0     # few-page working sets
+    deep_walk_cycles: float = 368.0     # >reach thrash regime
+    freq: float = 1.0e9
+    hit_cycles: float = 1.0
+
+    def __post_init__(self):
+        self._tlb: "collections.OrderedDict" = collections.OrderedDict()
+        self._l2: "collections.OrderedDict" = collections.OrderedDict()
+        self.lookups = 0
+        self.misses = 0
+        self.walks = 0
+
+    def reset(self):
+        self._tlb.clear()
+        self._l2.clear()
+        self.lookups = self.misses = self.walks = 0
+
+    def walk_cycles(self, footprint_pages: int) -> float:
+        if footprint_pages <= self.l2_entries:
+            return self.base_walk_cycles
+        scale = min(1.0, math.log2(footprint_pages / self.l2_entries) / 3.0)
+        return self.base_walk_cycles + scale * (self.deep_walk_cycles -
+                                                self.base_walk_cycles)
+
+    def _touch(self, cache, key, cap) -> bool:
+        if key in cache:
+            cache.move_to_end(key)
+            return True
+        cache[key] = True
+        while len(cache) > cap:
+            cache.popitem(last=False)
+        return False
+
+    def access(self, page_id, footprint_pages: int) -> float:
+        """Translate one page access; returns seconds."""
+        self.lookups += 1
+        if self._touch(self._tlb, page_id, self.tlb_entries):
+            return self.hit_cycles / self.freq
+        self.misses += 1
+        if self._touch(self._l2, page_id, self.l2_entries):
+            return (self.hit_cycles + self.l2_fill_cycles) / self.freq
+        self.walks += 1
+        return (self.hit_cycles + self.l2_fill_cycles +
+                self.walk_cycles(footprint_pages)) / self.freq
+
+
+# ---------------------------------------------------------------- DMA
+@dataclasses.dataclass(frozen=True)
+class DMAEngine:
+    read_channels: int = 2
+    write_channels: int = 2
+    burst_bytes: int = 1024
+    descriptor_ns: float = 45.0     # enqueue+fetch one descriptor
+    doorbell_ns: float = 400.0      # MMIO write (per offloaded call)
+    interrupt_ns: float = 4000.0    # MSI + IRQ + driver completion
+
+    def descriptor_time(self) -> float:
+        return self.descriptor_ns * 1e-9
+
+
+# ---------------------------------------------------------------- LLC
+@dataclasses.dataclass
+class LLC:
+    """Shared last-level cache for DC mode, page-granular LRU."""
+    size_bytes: int = 2 * 1024 * 1024
+    page_bytes: int = 4096
+    hit_latency_ns: float = 18.0
+    hit_bw: float = 64e9
+
+    def __post_init__(self):
+        self._lru: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def capacity_pages(self) -> int:
+        return self.size_bytes // self.page_bytes
+
+    def reset(self):
+        self._lru.clear()
+        self.hits = self.misses = 0
+
+    def access(self, page_id) -> bool:
+        """Returns hit?"""
+        if page_id in self._lru:
+            self.hits += 1
+            self._lru.move_to_end(page_id)
+            return True
+        self.misses += 1
+        self._lru[page_id] = True
+        while len(self._lru) > self.capacity_pages:
+            self._lru.popitem(last=False)
+        return False
+
+    def hit_time(self, nbytes: int) -> float:
+        return self.hit_latency_ns * 1e-9 + nbytes / self.hit_bw

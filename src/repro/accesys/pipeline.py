@@ -1,0 +1,149 @@
+"""Event-driven tile-pipeline simulator (paper Fig. 2 + Fig. 6).
+
+Replays the ``core.streaming`` schedule (Algorithm 1) against the
+component models: DMA-in(A), DMA-in(B), SA compute, DMA-out(C), with
+double buffering — transfers for step t+1 overlap compute of step t.
+Produces end-to-end latency plus the Fig.-2 latency buckets
+(descriptor / translation / transfer / compute / drain) and TLB stats
+(Table 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.accesys.components import (DMAEngine, DRAM, LLC, PCIeLink,
+                                      SMMU, SystolicArray, DTYPE_BYTES)
+from repro.core import streaming
+
+
+@dataclasses.dataclass
+class GemmResult:
+    total_s: float
+    compute_s: float
+    transfer_s: float            # serialized transfer demand
+    exposed_transfer_s: float    # transfer time NOT hidden by compute
+    descriptor_s: float
+    translation_s: float
+    tlb_lookups: int
+    tlb_misses: int
+    ptw_walks: int
+    macs: int
+
+    @property
+    def translation_overhead(self) -> float:
+        return self.translation_s / max(self.total_s, 1e-30)
+
+    @property
+    def gops(self) -> float:
+        return 2.0 * self.macs / max(self.total_s, 1e-30) / 1e9
+
+
+@dataclasses.dataclass
+class SystemConfig:
+    sa: SystolicArray = dataclasses.field(default_factory=SystolicArray)
+    pcie: PCIeLink = dataclasses.field(default_factory=PCIeLink)
+    dram: DRAM = dataclasses.field(default_factory=DRAM)
+    dma: DMAEngine = dataclasses.field(default_factory=DMAEngine)
+    smmu: SMMU = dataclasses.field(default_factory=SMMU)
+    llc: LLC = dataclasses.field(default_factory=LLC)
+    mode: str = "DC"                   # DM | DC | DevMem
+    page_bytes: int = 4096
+
+    def path_time(self, nbytes: int, page_id, footprint_pages: int):
+        """(transfer_s, translation_s) along the selected datapath."""
+        trans = self.smmu.access(page_id, footprint_pages)
+        if self.mode == "DevMem":
+            # arrow (6): on-card memory — no PCIe crossing
+            return self.dram.transfer_time(nbytes), trans
+        link = self.pcie.transfer_time(nbytes)
+        if self.mode == "DC" and self.llc.access(page_id):
+            # arrows (2,4): LLC hit — the coherent root-complex path
+            # coalesces repeated reads of cache-hot pages, so the
+            # endpoint sees only a fraction of the full serialization
+            mem = self.llc.hit_time(nbytes)
+            link *= 0.25
+        else:
+            mem = self.dram.transfer_time(nbytes)  # arrows (3,5)/(5)
+        return link + mem, trans
+
+
+def simulate_gemm(cfg: SystemConfig, M: int, N: int, K: int,
+                  dtype: Optional[str] = None,
+                  max_steps: int = 400_000) -> GemmResult:
+    """Event-driven replay of Algorithm 1. For very large problems the
+    inner loop is sampled and scaled (steady-state pipeline)."""
+    dtype = dtype or cfg.sa.dtype
+    elem = DTYPE_BYTES[dtype]
+    counts = streaming.tile_counts(M, N, K, f"int{8*elem}"
+                                   if dtype.startswith("int") else
+                                   {1: "int8", 2: "float16",
+                                    4: "float32"}[elem])
+    W, L = counts["w"], counts["l"]
+    page = cfg.page_bytes
+    footprint = counts["a_pages"] + counts["b_pages"] + \
+        counts["c_page_stores"]
+    cfg.smmu.reset()
+    cfg.llc.reset()
+
+    ops = streaming.schedule(M, N, K, {1: "int8", 2: "float16",
+                                       4: "float32"}[elem])
+    n_steps = counts["inner_steps"]
+    stride = max(1, n_steps // max_steps)
+
+    t_dma_free = 0.0       # input DMA channel availability
+    t_sa_free = 0.0
+    t_out_free = 0.0
+    compute_s = transfer_s = exposed_s = desc_s = trans_s = 0.0
+    simulated = 0
+
+    for op in ops:
+        # sampling: simulate every `stride`-th inner step, scale after
+        if ((op.i + op.j) * counts["k_steps"] + op.k) % stride \
+                and not op.last_k and not op.first_k:
+            continue
+        simulated += 1
+        # DMA-in A and B (two read channels run in parallel)
+        d = 2 * cfg.dma.descriptor_time() / cfg.dma.read_channels
+        ta, xa = cfg.path_time(page, ("a", op.a_page), footprint)
+        tb, xb = cfg.path_time(page, ("b", op.b_page), footprint)
+        tin = d + max(ta, tb) if cfg.dma.read_channels >= 2 \
+            else d + ta + tb
+        desc_s += d
+        trans_s += xa + xb
+        transfer_s += ta + tb
+        # double buffering: the fetch for this step ran during the
+        # previous step's compute
+        ready = max(t_dma_free, 0.0) + tin + xa + xb
+        t_dma_free = ready
+        start = max(ready, t_sa_free)
+        exposed_s += max(0.0, ready - t_sa_free)
+        # effective depth: the last K page may be partial
+        depth = min(L, K - op.k * L)
+        tile_compute = cfg.sa.tile_time(depth)
+        t_sa_free = start + tile_compute
+        compute_s += tile_compute
+        if op.last_k:
+            # DMA-out C overlaps the next tile's compute
+            tc, xc = cfg.path_time(W * W * elem, ("c", (op.i, op.j)),
+                                   footprint)
+            desc_s += cfg.dma.descriptor_time()
+            trans_s += xc
+            transfer_s += tc
+            t_out_free = max(t_out_free, t_sa_free) + tc
+
+    scale = n_steps / max(simulated, 1)
+    total = max(t_sa_free, t_out_free) * scale \
+        + cfg.dma.doorbell_ns * 1e-9 + cfg.dma.interrupt_ns * 1e-9
+    return GemmResult(
+        total_s=total,
+        compute_s=compute_s * scale,
+        transfer_s=transfer_s * scale,
+        exposed_transfer_s=exposed_s * scale,
+        descriptor_s=desc_s * scale,
+        translation_s=trans_s * scale,
+        tlb_lookups=int(cfg.smmu.lookups * scale),
+        tlb_misses=int(cfg.smmu.misses * scale),
+        ptw_walks=int(cfg.smmu.walks * scale),
+        macs=counts["macs"])

@@ -1,0 +1,58 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the exact published full config;
+``get_reduced(arch_id)`` returns a same-family tiny config for CPU smoke
+tests (small layers/width, few experts, tiny vocab).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RunConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    shapes_for,
+    skip_reason,
+)
+
+ARCH_IDS = [
+    "qwen2_moe_a2_7b",
+    "deepseek_v3_671b",
+    "qwen1_5_32b",
+    "qwen2_0_5b",
+    "chatglm3_6b",
+    "granite_20b",
+    "internvl2_2b",
+    "whisper_tiny",
+    "zamba2_7b",
+    "rwkv6_7b",
+]
+
+# CLI-friendly aliases (--arch qwen2-moe-a2.7b etc.)
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+ALIASES.update({
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "qwen2-0.5b": "qwen2_0_5b",
+})
+
+
+def _module(arch: str):
+    arch = ALIASES.get(arch, arch)
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES) + ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()

@@ -1,0 +1,1 @@
+from repro.core import modes, overlap, paging, streaming  # noqa: F401

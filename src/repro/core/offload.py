@@ -1,0 +1,76 @@
+"""Layer-pipelined weight streaming (host → device) — the model-level
+use of the paper's DM/DC/DevMem trichotomy: serve a model whose weights
+live in host memory by prefetching layer ℓ+1 while layer ℓ computes
+(double buffering at layer granularity = A0/A1 at page granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modes import (MemoryMode, TrafficStats, device_placement,
+                              host_placement)
+
+
+@dataclasses.dataclass
+class StreamReport:
+    mode: str
+    layers: int
+    bytes_streamed: int
+    wall_s: float
+
+
+class LayerStreamer:
+    """Holds stacked per-layer params (leading dim = layer) in host
+    memory (DM/DC) or device memory (DevMem) and applies a layer fn over
+    them with one-layer-ahead prefetch."""
+
+    def __init__(self, stacked_params, n_layers: int, mode: MemoryMode,
+                 cache_layers: int = 0):
+        self.mode = mode
+        self.n_layers = n_layers
+        place = device_placement if mode is MemoryMode.DEVMEM \
+            else host_placement
+        self._host = jax.tree.map(place, stacked_params)
+        self._layer_bytes = sum(
+            int(a.size * a.dtype.itemsize) // n_layers
+            for a in jax.tree.leaves(stacked_params))
+        self._cache: dict = {}
+        self._cache_layers = cache_layers if mode is MemoryMode.DC else 0
+        self.stats = TrafficStats()
+
+    def _fetch(self, idx: int):
+        self.stats.lookups += 1
+        if self.mode is MemoryMode.DEVMEM:
+            return jax.tree.map(lambda a: a[idx], self._host)
+        if idx in self._cache:
+            self.stats.cache_hits += 1
+            return self._cache[idx]
+        self.stats.cache_misses += 1
+        layer = jax.tree.map(
+            lambda a: device_placement(a[idx]), self._host)
+        self.stats.host_to_device_bytes += self._layer_bytes
+        if len(self._cache) < self._cache_layers:
+            self._cache[idx] = layer
+        return layer
+
+    def run(self, layer_fn: Callable, x, prefetch: int = 1):
+        """x -> layer_fn(params_i, x) for i in layers, with prefetch-ahead
+        (jax async dispatch overlaps the device_put with compute)."""
+        t0 = time.perf_counter()
+        pending = [self._fetch(i) for i in range(min(prefetch + 1,
+                                                     self.n_layers))]
+        for i in range(self.n_layers):
+            params_i = pending.pop(0)
+            nxt = i + prefetch + 1
+            if nxt < self.n_layers:
+                pending.append(self._fetch(nxt))   # async H2D
+            x = layer_fn(params_i, x)
+        x = jax.block_until_ready(x)
+        wall = time.perf_counter() - t0
+        return x, StreamReport(self.mode.value, self.n_layers,
+                               self.stats.host_to_device_bytes, wall)

@@ -1,0 +1,122 @@
+"""The paper's overlap bound (Eq. 1) and its TPU re-derivation.
+
+Eq. 1 (paper): for a W×W output-stationary array at clock f consuming
+A (W×L) and B (L×W) page tiles and draining C (W×W), transfers fully
+hide behind compute iff
+
+    S·(2WL + W²) / (η_io·BW) ≤ (L + 2(W−1)) / (η_sa·f)
+    ⟹  BW ≥ S·f·(2WL + W²)/(L + 2(W−1)) · η_sa/η_io
+
+Asymptotes (L→∞): BW∞ = 2·S·f·W → 32/64/128 GB/s for INT8/FP16/FP32 at
+W=16, f=1 GHz — the paper's numbers, reproduced by tests.
+
+TPU analogue: a (bm×bk)·(bk×bn) MXU block is compute-bound iff
+    bytes/step / HBM_BW ≤ flops/step / peak  ⟺  intensity ≥ peak/HBM_BW
+with intensity = 2·bm·bn·bk / S·(bm·bk + bk·bn + spill). Same algebra,
+different constants; used to pick kernel block sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPoint:
+    bw_required: float          # B/s to keep the array busy
+    compute_s: float            # per-tile compute time
+    transfer_s: float           # per-tile transfer time at bw_peak
+    feasible: bool
+
+
+def required_bandwidth(W: int, L: int, f: float, elem_bytes: int,
+                       eta_sa: float = 1.0, eta_io: float = 1.0) -> float:
+    """Eq. 1 right-hand side."""
+    num = elem_bytes * f * (2 * W * L + W * W)
+    den = L + 2 * (W - 1)
+    return num / den * (eta_sa / eta_io)
+
+
+def asymptotic_bandwidth(W: int, f: float, elem_bytes: int) -> float:
+    """L→∞ limit of Eq. 1: 2·S·f·W."""
+    return 2.0 * elem_bytes * f * W
+
+
+def evaluate(W: int, L: int, f: float, elem_bytes: int, bw_peak: float,
+             eta_sa: float = 1.0, eta_io: float = 1.0) -> OverlapPoint:
+    bw_req = required_bandwidth(W, L, f, elem_bytes, eta_sa, eta_io)
+    compute = (L + 2 * (W - 1)) / (eta_sa * f)
+    transfer = elem_bytes * (2 * W * L + W * W) / (eta_io * bw_peak)
+    return OverlapPoint(bw_req, compute, transfer, transfer <= compute)
+
+
+def sram_doubling_delta(W: int, L: int, f: float, elem_bytes: int) -> float:
+    """Relative CHANGE of the Eq.-1 bound when on-chip SRAM doubles
+    (L → 2L). Positive: the requirement gets *tighter* — longer tiles
+    amortize the fill/drain bubbles that previously gave the link slack.
+    Paper: ≤1–3 % at the 16×16 / 4 KB / INT8 design point, i.e. doubling
+    SRAM area+leakage buys nothing — the core argument for paged
+    streaming over scratchpad reuse."""
+    b1 = required_bandwidth(W, L, f, elem_bytes)
+    b2 = required_bandwidth(W, 2 * L, f, elem_bytes)
+    return (b2 - b1) / b1
+
+
+def min_feasible_tile_len(W: int, f: float, elem_bytes: int,
+                          bw_peak: float, max_l: int = 65536) -> int | None:
+    """Smallest L whose Eq.-1 bound fits under bw_peak (None if even the
+    asymptote exceeds the link — then the design is bandwidth-starved)."""
+    if asymptotic_bandwidth(W, f, elem_bytes) > bw_peak:
+        return None
+    lo, hi = 1, max_l
+    if required_bandwidth(W, hi, f, elem_bytes) > bw_peak:
+        return None
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if required_bandwidth(W, mid, f, elem_bytes) <= bw_peak:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+# ---------------------------------------------------------------------
+# TPU re-derivation: block-level overlap for the streaming GEMM kernel
+# ---------------------------------------------------------------------
+def tpu_block_overlap(bm: int, bn: int, bk: int, elem_bytes: int,
+                      peak_flops: float, hbm_bw: float) -> OverlapPoint:
+    flops = 2.0 * bm * bn * bk
+    bytes_in = (bm * bk + bk * bn) * elem_bytes
+    compute = flops / peak_flops
+    transfer = bytes_in / hbm_bw
+    # required bandwidth so transfer == compute
+    bw_req = bytes_in / compute
+    return OverlapPoint(bw_req, compute, transfer, transfer <= compute)
+
+
+def choose_gemm_blocks(M: int, N: int, K: int, elem_bytes: int,
+                       peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                       vmem_budget: int = 8 * 1024 * 1024):
+    """Pick (bm, bn, bk): smallest VMEM working set that is still
+    compute-bound by the TPU overlap bound — the paper's thesis
+    ('small buffers + streaming suffice once the bound is met')."""
+    best = None
+    cand_sizes = [128, 256, 512, 1024, 2048]
+    for bm in cand_sizes:
+        for bn in cand_sizes:
+            for bk in cand_sizes:
+                if bm > max(M, 128) or bn > max(N, 128) or bk > max(K, 128):
+                    continue
+                vmem = (bm * bk + bk * bn) * elem_bytes + bm * bn * 4
+                if vmem > vmem_budget:
+                    continue
+                pt = tpu_block_overlap(bm, bn, bk, elem_bytes,
+                                       peak_flops, hbm_bw)
+                if not pt.feasible:
+                    continue
+                key = (vmem, -bk)          # smallest working set, deep K
+                if best is None or key < best[0]:
+                    best = (key, (bm, bn, bk))
+    if best is None:                        # bandwidth-starved: max reuse
+        return 512, 512, min(2048, max(K, 128))
+    return best[1]

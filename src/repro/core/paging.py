@@ -1,0 +1,142 @@
+"""Page-aligned tiling (paper §3.3).
+
+The runtime partitions matrices into page-sized tiles: one tile = one OS
+page = one DMA descriptor = at most one TLB lookup. Tile geometry follows
+the paper exactly: W=16 rows, L columns such that W·L·S = page_bytes
+(INT8 16×256, FP16/INT16 16×128, FP32/INT32 16×64 for 4 KB pages).
+
+A is stored row-major per tile; B is stored ROW-STRIPED (by rows within
+the tile, tiles laid out so the k-walk of B is contiguous) — avoiding the
+strided column walk of Fig. 5 (top).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAGE_BYTES = 4096
+SA_DIM = 16                     # paper's systolic array width W
+
+
+def dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def tile_shape(dtype, page_bytes: int = PAGE_BYTES,
+               rows: int = SA_DIM) -> tuple[int, int]:
+    """(rows, cols) so one tile fills exactly one page."""
+    cols = page_bytes // (rows * dtype_bytes(dtype))
+    assert rows * cols * dtype_bytes(dtype) == page_bytes, \
+        (dtype, page_bytes, rows)
+    return rows, cols
+
+
+@dataclasses.dataclass(frozen=True)
+class PageLayout:
+    """Blocked layout of an (R, C) matrix in page tiles."""
+    rows: int
+    cols: int
+    tile_r: int
+    tile_c: int
+    row_striped: bool = False      # B-operand layout
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (-(-self.rows // self.tile_r), -(-self.cols // self.tile_c))
+
+    @property
+    def n_pages(self) -> int:
+        g = self.grid
+        return g[0] * g[1]
+
+    @property
+    def padded(self) -> tuple[int, int]:
+        g = self.grid
+        return (g[0] * self.tile_r, g[1] * self.tile_c)
+
+    def page_of(self, r: int, c: int) -> int:
+        """Linear page id holding element (r, c)."""
+        ti, tj = r // self.tile_r, c // self.tile_c
+        gr, gc = self.grid
+        # row-striped B: pages laid out column-of-tiles-major so a k-walk
+        # (down a tile column) is contiguous
+        return (tj * gr + ti) if self.row_striped else (ti * gc + tj)
+
+    def page_offset(self, r: int, c: int) -> int:
+        """Byte-free offset (in elements) of (r, c) inside its page —
+        row-major within the tile in BOTH layouts (that is the point:
+        no strided access even when walking B by column-of-tiles)."""
+        return (r % self.tile_r) * self.tile_c + (c % self.tile_c)
+
+
+def layout_for(shape, dtype, operand: str = "A",
+               page_bytes: int = PAGE_BYTES) -> PageLayout:
+    """A pages are (W × L); B pages are the transposed (L × W) so that one
+    A page × one B page yields a full W×W output block — B stored
+    row-striped (row-major within the L×W tile, tiles k-contiguous)."""
+    tr, tc = tile_shape(dtype, page_bytes)
+    if operand.upper() == "B":
+        return PageLayout(shape[0], shape[1], tc, tr, row_striped=True)
+    return PageLayout(shape[0], shape[1], tr, tc, row_striped=False)
+
+
+def pack_pages(x, layout: PageLayout):
+    """(R, C) -> (n_pages, tile_r, tile_c): the streaming order the DMA
+    engine sees; each [i] is one contiguous page."""
+    pr, pc = layout.padded
+    xp = jnp.pad(x, ((0, pr - layout.rows), (0, pc - layout.cols)))
+    gr, gc = layout.grid
+    t = xp.reshape(gr, layout.tile_r, gc, layout.tile_c)
+    if layout.row_striped:
+        t = t.transpose(2, 0, 1, 3)        # (gc, gr, tr, tc): k-contiguous
+    else:
+        t = t.transpose(0, 2, 1, 3)        # (gr, gc, tr, tc)
+    return t.reshape(layout.n_pages, layout.tile_r, layout.tile_c)
+
+
+def unpack_pages(pages, layout: PageLayout):
+    gr, gc = layout.grid
+    if layout.row_striped:
+        t = pages.reshape(gc, gr, layout.tile_r, layout.tile_c) \
+            .transpose(1, 2, 0, 3)
+    else:
+        t = pages.reshape(gr, gc, layout.tile_r, layout.tile_c) \
+            .transpose(0, 2, 1, 3)
+    x = t.reshape(layout.padded)
+    return x[:layout.rows, :layout.cols]
+
+
+def page_aligned_blocks(M: int, N: int, K: int, dtype,
+                        vmem_budget: int = 8 * 1024 * 1024,
+                        page_bytes: int = PAGE_BYTES):
+    """Pallas block sizes (bm, bn, bk) that are (a) page-multiples, so
+    each HBM→VMEM copy is a whole number of 4 KB pages, (b) MXU-aligned
+    (last dim ×128, second-to-last ×8), and (c) fit the VMEM budget
+    (A tile + B tile + fp32 C accumulator ≤ budget)."""
+    s = dtype_bytes(dtype)
+
+    def fit(bm, bn, bk):
+        return (bm * bk + bk * bn) * s + bm * bn * 4 <= vmem_budget
+
+    bm = bn = bk = 128
+    # grow greedily, biggest win first: K depth amortizes the C flush
+    for _ in range(64):
+        grew = False
+        for dim in ("bk", "bm", "bn"):
+            cand = dict(bm=bm, bn=bn, bk=bk)
+            cand[dim] *= 2
+            if cand["bm"] <= max(M, 128) and cand["bn"] <= max(N, 128) \
+                    and cand["bk"] <= max(K, 128) and fit(**cand):
+                bm, bn, bk = cand["bm"], cand["bn"], cand["bk"]
+                grew = True
+        if not grew:
+            break
+    # page alignment: every block row count is a multiple of 8 and the
+    # tile byte sizes are page multiples by construction (128·s·8 ≥ 1 KB;
+    # bm·bk·s here is ≥ 128·128·1 = 16 KiB = 4 pages)
+    assert (bm * bk * s) % page_bytes == 0 and (bk * bn * s) % page_bytes == 0
+    return bm, bn, bk

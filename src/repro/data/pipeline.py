@@ -1,0 +1,103 @@
+"""Deterministic synthetic data pipeline.
+
+Design goals for the fault-tolerance story:
+  * ``batch(step)`` is a PURE function of (seed, step) — after a restart
+    the stream resumes bit-identically from the checkpointed step with
+    no data-loader state to save;
+  * batches are sharded host→device against the mesh via NamedSharding;
+  * a small look-ahead prefetcher overlaps host generation with device
+    compute (jax async dispatch).
+
+The corpus is a Zipf-distributed token stream with injected
+(copy/induction) structure so tiny models actually learn something
+measurable in the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    zipf_a: float = 1.2
+    induction: bool = True     # repeat-structure so loss can fall
+
+
+class SyntheticCorpus:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> dict:
+        """Deterministic (tokens, labels) for this global step."""
+        c = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, step]))
+        v = max(c.vocab_size - 2, 2)
+        z = rng.zipf(c.zipf_a, size=(c.global_batch, c.seq_len + 1))
+        toks = (z % v).astype(np.int32) + 1
+        if c.induction and c.seq_len >= 8:
+            # copy structure: second half repeats the first half
+            half = (c.seq_len + 1) // 2
+            toks[:, half:2 * half] = toks[:, :half]
+        return {"tokens": toks[:, :-1],
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+class ShardedLoader:
+    """Wraps a corpus: shards each batch onto the mesh, prefetches ahead."""
+
+    def __init__(self, corpus: SyntheticCorpus, shardings: dict,
+                 start_step: int = 0, prefetch: int = 2):
+        self.corpus = corpus
+        self.shardings = shardings
+        self._step = start_step
+        self._prefetch = prefetch
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _put_device(self, step: int):
+        host = self.corpus.batch(step)
+        dev = {k: jax.device_put(v, self.shardings.get(k))
+               for k, v in host.items()}
+        return step, dev
+
+    def _fill(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put(self._put_device(step), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+
+
+def make_loader(model_cfg: ModelConfig, shape: ShapeConfig, shardings,
+                start_step: int = 0, seed: int = 1234) -> ShardedLoader:
+    corpus = SyntheticCorpus(DataConfig(
+        vocab_size=model_cfg.vocab_size, seq_len=shape.seq_len,
+        global_batch=shape.global_batch, seed=seed))
+    return ShardedLoader(corpus, shardings, start_step)

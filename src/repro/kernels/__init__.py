@@ -1,0 +1,5 @@
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention,
+    paged_attention,
+    streaming_gemm,
+)

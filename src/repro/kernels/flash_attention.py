@@ -1,0 +1,91 @@
+"""Flash attention (prefill/train) — streaming KV pages with O(block)
+VMEM state: the attention-level expression of the paper's paged
+streaming. Online softmax carried in VMEM scratch across the KV-inner
+grid; causal upper blocks are skipped (no wasted DMA or MXU work —
+the compute analogue of "only fetch pages you need").
+
+Layout: q, k, v as (BH, T, D) (caller folds batch×heads; GQA callers
+repeat KV heads). Grid: (BH, nq, nk) with nk innermost.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, nk: int, scale: float, causal: bool):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: skip blocks strictly above the diagonal
+    run = (ki * bk <= qi * bq + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)               # (bq, D)
+        k = k_ref[0].astype(jnp.float32)               # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_raw(q, k, v, *, bq: int = 256, bk: int = 512,
+                        causal: bool = True, interpret: bool = False):
+    """q: (BH, Tq, D); k, v: (BH, Tk, D). Tq % bq == Tk % bk == 0."""
+    BH, Tq, D = q.shape
+    _, Tk, _ = k.shape
+    bq, bk = min(bq, Tq), min(bk, Tk)
+    assert Tq % bq == 0 and Tk % bk == 0, (Tq, Tk, bq, bk)
+    nq, nk = Tq // bq, Tk // bk
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk,
+                               scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,112 @@
+"""Paged decode attention — the serving-side embodiment of the paper's
+SMMU/page-table design: the KV cache lives in fixed-size pages, a
+per-sequence page table provides the indirection, and the kernel walks
+the table exactly like the SMMU translates 4 KB-aligned DMA bursts.
+
+The page table rides in scalar-prefetch memory (SMEM) so the index_map
+can "translate" page ids BEFORE the DMA of each K/V page is issued —
+one translation per page, just like one TLB lookup per 4 KB tile in the
+paper (§3.3).
+
+Shapes:
+  q:        (B, H, D)          one decode token per sequence
+  k_pages:  (P, page, KH, D)   global page pool (P pages)
+  v_pages:  (P, page, KH, D)
+  table:    (B, max_pages)     page ids per sequence (int32)
+  lens:     (B,)               current KV length per sequence
+Output: (B, H, D).
+
+Grid: (B, max_pages) — pages innermost; online softmax in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page: int, max_pages: int,
+                  scale: float, n_kv: int):
+    b, pi = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = lens_ref[b]
+    n_pages_used = (seq_len + page - 1) // page
+
+    @pl.when(pi < n_pages_used)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # (H, D)
+        k = k_ref[0].astype(jnp.float32)                 # (page, KH, D)
+        v = v_ref[0]                                     # (page, KH, D)
+        H, D = q.shape
+        G = H // n_kv
+        qg = q.reshape(n_kv, G, D)
+        s = jnp.einsum("hgd,phd->hgp", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        pos = pi * page + jax.lax.broadcasted_iota(
+            jnp.int32, (n_kv, G, page), 2)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_ref[...].reshape(n_kv, G)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[...].reshape(n_kv, G) * corr + p.sum(axis=-1)
+        upd = jnp.einsum("hgp,phd->hgd", p.astype(jnp.float32),
+                         v.astype(jnp.float32))
+        acc = acc_ref[...].reshape(n_kv, G, D)
+        acc_ref[...] = (acc * corr[..., None] + upd).reshape(H, D)
+        m_ref[...] = m_new.reshape(H)
+        l_ref[...] = l_new.reshape(H)
+
+    @pl.when(pi == max_pages - 1)
+    def _flush():
+        H, D = q_ref[0].shape
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_attention_raw(q, k_pages, v_pages, table, lens, *,
+                        interpret: bool = False):
+    B, H, D = q.shape
+    P, page, KH, _ = k_pages.shape
+    _, max_pages = table.shape
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_paged_kernel, page=page,
+                               max_pages=max_pages, scale=scale, n_kv=KH)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # (table, lens) land in SMEM
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, pi, table, lens: (b, 0, 0)),
+            # the SMMU moment: translate page id -> pool slot in index_map
+            pl.BlockSpec((1, page, KH, D),
+                         lambda b, pi, table, lens: (table[b, pi], 0, 0, 0)),
+            pl.BlockSpec((1, page, KH, D),
+                         lambda b, pi, table, lens: (table[b, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, pi, table, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, D), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(table, lens, q, k_pages, v_pages)

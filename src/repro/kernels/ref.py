@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gemm_ref(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) else jnp.float32
+    return jnp.dot(a, b, preferred_element_type=acc).astype(out_dtype)
+
+
+def flash_ref(q, k, v, causal=True):
+    """q: (BH, Tq, D); k, v: (BH, Tk, D)."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(Tq)[:, None] >= jnp.arange(Tk)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def paged_ref(q, k_pages, v_pages, table, lens):
+    """Gather pages into contiguous caches, then masked attention."""
+    B, H, D = q.shape
+    P, page, KH, _ = k_pages.shape
+    max_pages = table.shape[1]
+    G = H // KH
+    k = k_pages[table].reshape(B, max_pages * page, KH, D)
+    v = v_pages[table].reshape(B, max_pages * page, KH, D)
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)
+                   ) / math.sqrt(D)
+    valid = jnp.arange(max_pages * page)[None] < lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

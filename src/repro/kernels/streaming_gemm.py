@@ -1,0 +1,71 @@
+"""MatrixFlow streaming GEMM — the paper's core kernel, TPU-native.
+
+Paper → TPU mapping:
+  * 4 KB page-aligned A/B tiles, one DMA descriptor per tile
+      → BlockSpec tiles, one pipeline copy per grid step (block bytes are
+        kept page-multiple; see ``core.paging.page_aligned_blocks``)
+  * A0/A1,B0/B1 double buffering ∥ systolic compute ∥ C drain (Fig. 6)
+      → the Pallas grid pipeline double-buffers HBM→VMEM input copies
+        against MXU compute automatically; C is written once per (i, j)
+  * output-stationary 16×16 systolic accumulation
+      → output-stationary fp32 VMEM accumulator over the K-inner grid
+  * tiny on-chip SRAM (3×4 KB), storage lives in the system
+      → minimal VMEM working set: one A tile + one B tile + one C
+        accumulator; no weight residency assumed.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the accumulator in VMEM scratch
+carries partial sums across K steps (sequential grid on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
+                 out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...],
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def streaming_gemm_raw(a, b, *, bm: int, bn: int, bk: int,
+                       out_dtype=None, interpret: bool = False):
+    """a: (M, K), b: (K, N) with M % bm == N % bn == K % bk == 0."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        (a.shape, b.shape, bm, bn, bk)
+    out_dtype = out_dtype or a.dtype
+    acc_dtype = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) \
+        else jnp.float32
+    grid = (M // bm, N // bn, K // bk)
+    kernel = functools.partial(_gemm_kernel, k_steps=grid[2],
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # A page tile
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # B page tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )(a, b)

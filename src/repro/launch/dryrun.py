@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+                           ).strip()
+# ^ MUST run before any jax import: jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against the production mesh and extract roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh single multi --out artifacts/dryrun
+
+Success criterion: ``.lower().compile()`` succeeds and
+``memory_analysis()`` / ``cost_analysis()`` are recorded for every cell.
+Skipped cells (long_500k × full-attention archs) are recorded with their
+skip reason rather than silently dropped.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ALIASES, ARCH_IDS, SHAPES, get_config, skip_reason
+from repro.configs.base import RunConfig
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             run_overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind}
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    overrides = dict(run_overrides or {})
+    # memory-sane optimizer default for the huge training cells
+    if shape.kind == "train" and cfg.n_params() > 3e10:
+        overrides.setdefault("optimizer", "adafactor")
+    run = RunConfig(model=cfg, shape=shape, multi_pod=multi_pod, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    built = build_step(run, mesh)
+    with mesh:
+        jitted = jax.jit(built.fn,
+                         in_shardings=built.in_shardings,
+                         out_shardings=built.out_shardings,
+                         donate_argnums=built.donate_argnums)
+        lowered = jitted.lower(*built.abstract_inputs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    hlo = compiled.as_text()
+    rl = RL.compute_roofline(cost, hlo, n_dev,
+                             RL.model_flops_for(cfg, shape), mem)
+    rec.update(status="ok", lower_s=round(t_lower, 2),
+               compile_s=round(t_compile, 2), n_devices=n_dev,
+               optimizer=run.optimizer, roofline=rl.to_dict())
+    if mem is not None:
+        rec["memory_analysis"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single"],
+                    choices=["single", "multi"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--kv-chunk", type=int, default=0)
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--kv-cache-quant", action="store_true")
+    ap.add_argument("--moe-cap-axis", default="")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--moe-local", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == ["all"] else [
+        ALIASES.get(a, a) for a in args.arch]
+    shapes = list(SHAPES) if args.shape == ["all"] else args.shape
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    overrides = {"remat": args.remat}
+    if args.optimizer:
+        overrides["optimizer"] = args.optimizer
+    for field, val in (("q_chunk", args.q_chunk),
+                       ("kv_chunk", args.kv_chunk),
+                       ("ce_chunk", args.ce_chunk),
+                       ("ssm_chunk", args.ssm_chunk)):
+        if val:
+            overrides[field] = val
+    if args.kv_cache_quant:
+        overrides["kv_cache_quant"] = True
+    if args.moe_cap_axis:
+        overrides["moe_cap_axis"] = args.moe_cap_axis
+    if args.no_fsdp:
+        overrides["fsdp"] = False
+    if args.moe_local:
+        overrides["moe_local_dispatch"] = True
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in args.mesh:
+                multi = mesh_kind == "multi"
+                name = f"{arch}.{shape}.{mesh_kind}.{args.tag}"
+                path = outdir / f"{name}.json"
+                try:
+                    rec = run_cell(arch, shape, multi, overrides)
+                except Exception as e:  # a failing cell is a bug: surface it
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                rec["tag"] = args.tag
+                path.write_text(json.dumps(rec, indent=1))
+                results.append(rec)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"{name:55s} OK  compile={rec['compile_s']:7.1f}s "
+                          f"compute={r['compute_s']:.3e} "
+                          f"memory={r['memory_s']:.3e} "
+                          f"coll={r['collective_s']:.3e} "
+                          f"bound={r['bottleneck']:10s} "
+                          f"roofline={r['roofline_fraction']:.3f}",
+                          flush=True)
+                else:
+                    print(f"{name:55s} {rec['status'].upper()} "
+                          f"{rec.get('reason', rec.get('error', ''))[:90]}",
+                          flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Roofline-term extraction from a compiled (dry-run) artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+    compute    = per-device HLO FLOPs / peak_FLOP/s
+    memory     = per-device HLO bytes-accessed / HBM bandwidth
+    collective = per-device collective bytes (ring-model effective) / ICI bw
+
+`cost_analysis()` on the SPMD-partitioned module already reports
+*per-device* flops/bytes (verified empirically), so no extra division by
+chip count. Collective bytes are parsed from the optimized HLO text: for
+each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we take the per-device result bytes and apply ring
+cost factors over the parsed replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+# ----- TPU v5e-class hardware constants (per chip) -----
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (effective, one direction)
+DCN_BW = 25e9                # B/s per host, pod-to-pod
+HBM_BYTES = 16 * 1024 ** 3   # 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9_]+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    effective_bytes: float      # ring-model per-device bytes on the wire
+    count: int
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    by_op: dict = {}
+    effective = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3).lower()
+        nbytes = _shape_bytes(dtype, dims)
+        # group size
+        g = n_devices
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            im = _IOTA_RE.search(line)
+            if im:
+                g = int(im.group(2))
+        g = max(g, 1)
+        ring = (g - 1) / g
+        if op == "all-reduce":
+            eff = 2 * nbytes * ring          # reduce-scatter + all-gather
+        elif op == "all-gather":
+            eff = nbytes * ring              # result bytes gathered
+        elif op == "reduce-scatter":
+            eff = nbytes * g * ring          # operand = result × g
+        elif op == "all-to-all":
+            eff = nbytes * ring
+        else:                                 # collective-permute
+            eff = nbytes
+        by_op[op] = by_op.get(op, 0.0) + nbytes
+        effective += eff
+        count += 1
+    return CollectiveStats(by_op, effective, count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # 6·N·D (train) / 2·N·D (inference), global
+    useful_ratio: float           # model_flops / (flops_per_device × chips)
+    memory_per_device_bytes: Optional[float] = None
+    fits_hbm: Optional[bool] = None
+    collective_count: int = 0
+    step_time_s: float = 0.0      # max of the three terms (overlap ideal)
+    roofline_fraction: float = 0.0  # useful compute time / step time
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(cost: dict, hlo_text: str, n_devices: int,
+                     model_flops: float,
+                     memory_stats=None) -> Roofline:
+    # XLA's cost_analysis() counts while bodies once; use the trip-count-
+    # aware HLO walker instead (hlo_analysis) and keep XLA's numbers as a
+    # cross-check lower bound.
+    from repro.launch import hlo_analysis as HA
+    hc = HA.analyze(hlo_text)
+    flops = max(hc.flops, float(cost.get("flops", 0.0)))
+    nbytes = max(hc.bytes, float(cost.get("bytes accessed", 0.0)))
+    coll = CollectiveStats(hc.coll_by_op, hc.coll_effective, hc.coll_count)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = coll.effective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mem_per_dev = None
+    fits = None
+    if memory_stats is not None:
+        mem_per_dev = float(
+            memory_stats.argument_size_in_bytes
+            + memory_stats.output_size_in_bytes
+            + memory_stats.temp_size_in_bytes
+            - memory_stats.alias_size_in_bytes)
+        fits = mem_per_dev <= HBM_BYTES
+    useful = model_flops / max(flops * n_devices, 1.0)
+    step = max(compute_s, memory_s, collective_s)
+    useful_compute_s = (model_flops / n_devices) / PEAK_FLOPS_BF16
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=nbytes,
+        collective_bytes=coll.effective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops, useful_ratio=useful,
+        memory_per_device_bytes=mem_per_dev, fits_hbm=fits,
+        collective_count=coll.count, step_time_s=step,
+        roofline_fraction=useful_compute_s / max(step, 1e-30))
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Useful model FLOPs for this cell: 6·N·D train, 2·N·D inference
+    (N = active params, D = tokens processed globally)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch        # decode: 1 token per seq
+
+
+def active_params(cfg) -> float:
+    """Per-token active parameter count (MoE: top-k + shared only)."""
+    n = cfg.n_params()
+    if cfg.moe is not None:
+        m = cfg.moe
+        ff_mult = 3 if cfg.glu else 2
+        per_expert = ff_mult * cfg.d_model * m.d_ff_expert
+        moe_layers = cfg.n_layers - m.first_dense_layers
+        inactive = (m.n_routed_experts - m.top_k) * per_expert * moe_layers
+        n = n - inactive
+    return float(n)

@@ -1,0 +1,212 @@
+"""Step builders: train_step / prefill_step / decode_step with full
+NamedSharding in/out specs derived from logical axes. Used identically by
+the real trainer/server and the dry-run (which only lowers + compiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.launch.mesh import mesh_shape_dict
+from repro.models import model as M
+from repro.optim import cosine_schedule, get_optimizer
+from repro.sharding import logical as LG
+from repro.models import tuning as TU
+from repro.sharding.context import mesh_context
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Callable                 # jit-able python callable
+    in_shardings: Any
+    out_shardings: Any
+    abstract_inputs: tuple       # ShapeDtypeStructs (with shardings) to lower
+    donate_argnums: tuple = ()
+
+
+def _ctx_wrap(fn, mesh, rules, run: Optional[RunConfig] = None):
+    """Activate the logical-sharding + tuning contexts whenever fn is
+    traced, so model-level ``shard()`` constraints and chunk knobs
+    resolve against this mesh / run."""
+    t = TU.Tuning()
+    if run is not None:
+        t = TU.Tuning(q_chunk=run.q_chunk, kv_chunk=run.kv_chunk,
+                      ce_chunk=run.ce_chunk, ssm_chunk=run.ssm_chunk,
+                      kv_cache_quant=run.kv_cache_quant,
+                      moe_cap_axis=run.moe_cap_axis or None,
+                      moe_local_dispatch=run.moe_local_dispatch)
+
+    @functools.wraps(fn)
+    def wrapper(*a, **k):
+        with mesh_context(mesh, rules), TU.tuning_context(t):
+            return fn(*a, **k)
+    return wrapper
+
+
+def _run_tuning(run: RunConfig):
+    return TU.tuning_context(TU.Tuning(
+        q_chunk=run.q_chunk, kv_chunk=run.kv_chunk, ce_chunk=run.ce_chunk,
+        ssm_chunk=run.ssm_chunk, kv_cache_quant=run.kv_cache_quant,
+        moe_cap_axis=run.moe_cap_axis or None,
+        moe_local_dispatch=run.moe_local_dispatch))
+
+
+def _shardings(axes_tree, shapes_tree, rules, mesh):
+    ms = mesh_shape_dict(mesh)
+    def one(axes, shp):
+        return NamedSharding(mesh, LG.spec_for(axes, shp, rules, ms))
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _shapes_of(tree):
+    return jax.tree.map(lambda a: tuple(a.shape), tree)
+
+
+def _with_sharding(abstract, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def make_rules(run: RunConfig, mesh: Mesh):
+    long_ctx = run.shape.name == "long_500k" or (
+        run.shape.is_decode and run.shape.global_batch <
+        mesh_shape_dict(mesh).get("data", 1))
+    overrides = {}
+    if run.moe_cap_axis:
+        overrides["moe_cap"] = (run.moe_cap_axis,)
+    if not run.fsdp:
+        overrides["embed"] = ()
+    return LG.make_rules("pod" in mesh.axis_names, long_context=long_ctx,
+                         overrides=overrides)
+
+
+# =====================================================================
+# train
+# =====================================================================
+def build_train_step(run: RunConfig, mesh: Mesh,
+                     lr_base: float = 3e-4, lr_warmup: int = 200,
+                     lr_total: int = 10000) -> BuiltStep:
+    cfg = run.model
+    model = M.Model(cfg, remat=run.remat)
+    opt = get_optimizer(run.optimizer)
+    lr_fn = cosine_schedule(lr_base, lr_warmup, lr_total)
+    rules = make_rules(run, mesh)
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        lr = lr_fn(state["opt"]["step"])
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state["opt"], state["params"], lr)
+        metrics = {**metrics, **opt_metrics, "loss": loss, "lr": lr}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    # abstract state + shardings
+    aparams = model.abstract_params()
+    aopt = jax.eval_shape(opt.init, aparams)
+    p_axes = model.param_axes()
+    o_axes = opt.state_axes(p_axes)
+    state_ax = {"params": p_axes, "opt": o_axes}
+    astate = {"params": aparams, "opt": aopt}
+    state_sh = _shardings(state_ax, _shapes_of(astate), rules, mesh)
+
+    ainputs = M.input_specs(cfg, run.shape)
+    b_axes = M.batch_axes(cfg, run.shape)
+    batch_sh = _shardings(b_axes, _shapes_of(ainputs), rules, mesh)
+
+    metric_sh = None  # replicated scalars
+    return BuiltStep(
+        fn=_ctx_wrap(train_step, mesh, rules, run),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metric_sh),
+        abstract_inputs=(_with_sharding(astate, state_sh),
+                         _with_sharding(ainputs, batch_sh)),
+        donate_argnums=(0,),
+    )
+
+
+# =====================================================================
+# serve: prefill + decode
+# =====================================================================
+def build_prefill_step(run: RunConfig, mesh: Mesh) -> BuiltStep:
+    cfg, shape = run.model, run.shape
+    model = M.Model(cfg, remat=run.remat)
+    rules = make_rules(run, mesh)
+    cache_seq = shape.seq_len
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_seq)
+
+    aparams = model.abstract_params()
+    p_sh = _shardings(model.param_axes(), _shapes_of(aparams), rules, mesh)
+    ainputs = M.input_specs(cfg, shape)
+    b_sh = _shardings(M.batch_axes(cfg, shape), _shapes_of(ainputs),
+                      rules, mesh)
+    enc_seq = max(shape.seq_len, 16)
+    with _run_tuning(run):
+        acache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cache_seq,
+                                     enc_seq))
+        c_ax = model.cache_axes()
+    c_sh = _shardings(c_ax, _shapes_of(acache), rules, mesh)
+    logits_sh = NamedSharding(mesh, P())
+    return BuiltStep(
+        fn=_ctx_wrap(prefill_step, mesh, rules, run),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(c_sh, logits_sh),
+        abstract_inputs=(_with_sharding(aparams, p_sh),
+                         _with_sharding(ainputs, b_sh)),
+    )
+
+
+def build_decode_step(run: RunConfig, mesh: Mesh) -> BuiltStep:
+    cfg, shape = run.model, run.shape
+    model = M.Model(cfg, remat=run.remat)
+    rules = make_rules(run, mesh)
+
+    def decode_step(params, cache, tokens):
+        new_cache, logits = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(
+            logits[..., :cfg.vocab_size], axis=-1).astype(jnp.int32)
+        return new_cache, next_tok
+
+    aparams = model.abstract_params()
+    p_sh = _shardings(model.param_axes(), _shapes_of(aparams), rules, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    enc_seq = max(S // 8, 16) if cfg.family == "audio" else 16
+    with _run_tuning(run):
+        acache = jax.eval_shape(lambda: model.init_cache(B, S, enc_seq))
+        c_ax = model.cache_axes()
+    c_sh = _shardings(c_ax, _shapes_of(acache), rules, mesh)
+    t_sh = NamedSharding(
+        mesh, LG.spec_for(("batch",), (B,), rules, mesh_shape_dict(mesh)))
+    return BuiltStep(
+        fn=_ctx_wrap(decode_step, mesh, rules, run),
+        in_shardings=(p_sh, c_sh, t_sh),
+        out_shardings=(c_sh, t_sh),
+        abstract_inputs=(_with_sharding(aparams, p_sh),
+                         _with_sharding(acache, c_sh),
+                         jax.ShapeDtypeStruct((B,), jnp.int32,
+                                              sharding=t_sh)),
+        donate_argnums=(1,),
+    )
+
+
+def build_step(run: RunConfig, mesh: Mesh) -> BuiltStep:
+    if run.shape.kind == "train":
+        return build_train_step(run, mesh)
+    if run.shape.kind == "prefill":
+        return build_prefill_step(run, mesh)
+    return build_decode_step(run, mesh)

@@ -1,0 +1,143 @@
+"""Unified model API used by the launcher, trainer, server, and dry-run.
+
+``Model(cfg)`` exposes pure functions:
+    init(rng) -> params                      (eval_shape-able)
+    loss(params, batch) -> (scalar, metrics)
+    prefill(params, batch, cache_seq) -> (cache, logits)
+    decode_step(params, cache, tokens) -> (cache, logits)
+    init_cache(batch, seq) / cache_axes() / param_axes()
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every
+model input (spec-only: no allocation), per the assigned shape cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decoding as D
+from repro.models import transformer as T
+from repro.models.params import axes_tree, init_tree
+
+Params = Any
+
+# modality-stub frontends provide this many encoder frames/patches per
+# the spec ("input_specs() provides precomputed frame/patch embeddings").
+AUDIO_FRAMES_TRAIN_FRACTION = 1.0
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat: str = "full"):
+        self.cfg = cfg
+        self.remat = remat
+        self._pspecs = T.lm_pspecs(cfg)
+
+    # ---------------- params
+    def init(self, rng) -> Params:
+        return init_tree(self._pspecs, rng)
+
+    def param_axes(self):
+        return axes_tree(self._pspecs)
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ---------------- train
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, aux, _ = T.forward_train(params, cfg, batch, self.remat)
+        ce = T.chunked_ce_loss(params, cfg, h, batch["labels"])
+        total = ce + aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp:
+            ml = T.mtp_loss(params, cfg, h, batch)
+            total = total + 0.3 * ml
+            metrics["mtp"] = ml
+        return total, metrics
+
+    # ---------------- serve
+    def init_cache(self, batch: int, seq: int, enc_seq: int = 0):
+        return D.init_cache(self.cfg, batch, seq, enc_seq)
+
+    def cache_axes(self):
+        return D.cache_axes(self.cfg)
+
+    def prefill(self, params, batch, cache_seq: int):
+        return D.prefill(params, self.cfg, batch, cache_seq, self.remat)
+
+    def decode_step(self, params, cache, tokens):
+        return D.decode_step(params, self.cfg, cache, tokens)
+
+
+# =====================================================================
+# ShapeDtypeStruct input stand-ins for the dry-run / AOT lowering
+# =====================================================================
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for the given (arch × shape) cell — no allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"audio_frames": sds((B, S, cfg.d_model), bf16),
+                    "tokens": sds((B, S), i32),
+                    "labels": sds((B, S), i32)}
+        if cfg.embedding_inputs:
+            return {"embeddings": sds((B, S, cfg.d_model), bf16),
+                    "labels": sds((B, S), i32)}
+        return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            # enc-dec: encoder consumes S frames, decoder prompt is S//8
+            return {"audio_frames": sds((B, S, cfg.d_model), bf16),
+                    "tokens": sds((B, max(S // 8, 16)), i32)}
+        if cfg.embedding_inputs:
+            return {"embeddings": sds((B, S, cfg.d_model), bf16)}
+        return {"tokens": sds((B, S), i32)}
+
+    # decode: one new token against a cache of length S
+    return {"tokens": sds((B,), i32)}
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical axes for each input (resolved by sharding.logical)."""
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"audio_frames": ("batch", "seq", "embed_act"),
+                    "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if cfg.embedding_inputs:
+            return {"embeddings": ("batch", "seq", "embed_act"),
+                    "labels": ("batch", "seq")}
+        return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"audio_frames": ("batch", "seq", "embed_act"),
+                    "tokens": ("batch", "seq")}
+        if cfg.embedding_inputs:
+            return {"embeddings": ("batch", "seq", "embed_act")}
+        return {"tokens": ("batch", "seq")}
+    return {"tokens": ("batch",)}
+
+
+def make_concrete_batch(cfg: ModelConfig, shape: ShapeConfig, rng=None,
+                        batch: Optional[int] = None,
+                        seq: Optional[int] = None) -> dict:
+    """Small concrete batch matching input_specs (smoke tests, examples)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    B = batch or shape.global_batch
+    S = seq or shape.seq_len
+    specs = input_specs(cfg, ShapeConfig(shape.name, shape.kind, S, B))
+    out = {}
+    for k, v in specs.items():
+        r, rng = jax.random.split(rng)
+        if jnp.issubdtype(v.dtype, jnp.integer):
+            out[k] = jax.random.randint(r, v.shape, 0, cfg.vocab_size,
+                                        dtype=v.dtype)
+        else:
+            out[k] = jax.random.normal(r, v.shape, v.dtype) * 0.02
+    return out

@@ -1,0 +1,196 @@
+"""Mixture-of-Experts FFN with sort-based grouped-GEMM dispatch.
+
+Compile-friendly fixed-shape dispatch (no ragged ops):
+  1. router softmax -> top-k (probs, expert ids)
+  2. stable argsort of flat assignments groups tokens by expert
+  3. scatter into an (E, C, d) buffer (capacity C, overflow dropped)
+  4. one grouped einsum per FFN matmul over stacked expert weights
+  5. gather back and combine with routing probs
+
+Expert weights carry the "expert" logical axis -> TP/EP over the `model`
+mesh axis. The buffers are the activation-side analogue of the paper's
+page-aligned tiles: fixed-capacity contiguous blocks per expert instead
+of scattered per-token traffic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_act
+from repro.models.params import PSpec
+from repro.sharding.context import shard
+
+
+def moe_pspecs(cfg: ModelConfig):
+    m, d, f = cfg.moe, cfg.d_model, cfg.moe.d_ff_expert
+    E = m.n_routed_experts
+    p = {
+        "router": PSpec((d, E), ("embed", "expert"), scale=d ** -0.5),
+        "wi_gate": PSpec((E, d, f), ("expert", "embed", "mlp")),
+        "wi_up": PSpec((E, d, f), ("expert", "embed", "mlp")),
+        "wo": PSpec((E, f, d), ("expert", "mlp", "embed")),
+    }
+    if m.n_shared_experts:
+        fs = f * m.n_shared_experts
+        p["shared_wi_gate"] = PSpec((d, fs), ("embed", "mlp"))
+        p["shared_wi_up"] = PSpec((d, fs), ("embed", "mlp"))
+        p["shared_wo"] = PSpec((fs, d), ("mlp", "embed"))
+    return p
+
+
+def apply_moe(p, x, cfg: ModelConfig, capacity_factor: float = 1.25,
+              capacity: int | None = None):
+    """x: (B, T, d) -> (y: (B, T, d), aux_loss: scalar).
+
+    ``capacity`` overrides the capacity-factor sizing; pass ``capacity=n``
+    (token count) at decode time for lossless routing.
+
+    Dispatch strategies:
+      * global (baseline): one argsort over all B*T tokens - simple, but
+        GSPMD replicates the sorted token tensors and all-reduces 100s of
+        GB per layer on a 256-chip mesh (measured);
+      * row-local (Tuning.moe_local_dispatch): sort/bucket per batch row
+        so every dispatch tensor keeps its `batch` sharding - no dispatch
+        collectives; capacity is per-row (tokens compete within their own
+        sequence - the standard EP formulation).
+    """
+    from repro.models import tuning as TU
+    if TU.get().moe_local_dispatch and x.shape[1] > 1:
+        return _apply_moe_local(p, x, cfg, capacity_factor, capacity)
+    m = cfg.moe
+    B, T, d = x.shape
+    E, k = m.n_routed_experts, m.top_k
+    xt = x.reshape(B * T, d)
+    n = B * T
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (n, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(0)                                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (n * k)
+    aux = E * jnp.sum(me * ce) * m.router_aux_coef
+
+    flat_e = top_e.reshape(-1)                                # (n*k,)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+    flat_p = top_p.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(n * k) - starts[e_sorted]
+    if capacity is not None:
+        C = capacity
+    else:
+        C = max(int(n * k / E * capacity_factor), 8)
+    C = min(-(-C // 8) * 8, n * k)
+    keep = pos_in_e < C
+
+    # dispatch: (E, C, d)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[jnp.where(keep, e_sorted, E - 1),
+                 jnp.where(keep, pos_in_e, C - 1)].set(
+        jnp.where(keep[:, None], xt[tok_sorted], 0), mode="drop")
+    from repro.models import tuning as TU
+    cap_ax = "moe_cap" if TU.get().moe_cap_axis else None
+    buf = shard(buf, ("expert", cap_ax, None))
+
+    h = apply_act(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"]), cfg) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    h = shard(h, ("expert", cap_ax, "mlp"))
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])              # (E, C, d)
+    y_e = shard(y_e, ("expert", cap_ax, None))
+
+    # combine: gather expert outputs back to token order, weight by probs
+    gathered = y_e[e_sorted, jnp.minimum(pos_in_e, C - 1)]    # (n*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    contrib = gathered * flat_p[order][:, None].astype(gathered.dtype)
+    y = jnp.zeros((n, d), contrib.dtype).at[tok_sorted].add(contrib)
+
+    if m.n_shared_experts:
+        sh = apply_act(xt @ p["shared_wi_gate"], cfg) * (xt @ p["shared_wi_up"])
+        y = y + sh @ p["shared_wo"]
+    return y.reshape(B, T, d).astype(x.dtype), aux
+
+
+def _apply_moe_local(p, x, cfg: ModelConfig, capacity_factor: float,
+                     capacity):
+    """Row-local dispatch: every tensor keeps the leading (batch) dim, so
+    the whole dispatch/combine pipeline stays batch-sharded."""
+    m = cfg.moe
+    B, T, d = x.shape
+    E, k = m.n_routed_experts, m.top_k
+
+    logits = (x @ p["router"]).astype(jnp.float32)            # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # (B,T,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0) / (B * T * k)
+    aux = E * jnp.sum(me * ce) * m.router_aux_coef
+
+    nk = T * k
+    flat_e = top_e.reshape(B, nk)                             # (B, T*k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(T), k)[None], (B, nk))
+    flat_p = top_p.reshape(B, nk)
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)         # (B, nk)
+    e_sorted = jnp.take_along_axis(flat_e, order, -1)
+    tok_sorted = jnp.take_along_axis(flat_tok, order, -1)
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(flat_e)
+    starts = jnp.cumsum(counts, -1) - counts                  # (B, E)
+    pos_in_e = jnp.arange(nk)[None] - jnp.take_along_axis(
+        starts, e_sorted, -1)
+    if capacity is not None:
+        C = capacity
+    else:
+        C = max(int(nk / E * capacity_factor), 4)
+    C = min(-(-C // 4) * 4, nk)
+    keep = pos_in_e < C
+
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, nk))
+    x_sorted = shard(x[bidx, tok_sorted], ("batch", None, None))
+    buf = jnp.zeros((B, E, C, d), x.dtype)
+    buf = buf.at[bidx,
+                 jnp.where(keep, e_sorted, E - 1),
+                 jnp.where(keep, pos_in_e, C - 1)].set(
+        jnp.where(keep[..., None], x_sorted, 0), mode="drop")
+    buf = shard(buf, ("batch", "expert", None, None))
+
+    # use-site weight gather: constrain expert weights to drop the FSDP
+    # (`data`) shard here, so GSPMD all-gathers 22.5 GB of weights per
+    # layer instead of all-reducing TBs of (B,E,C,f) partial activations
+    # (measured 5140s -> the dominant term without this).
+    wi_g = shard(p["wi_gate"], ("expert", None, "mlp"))
+    wi_u = shard(p["wi_up"], ("expert", None, "mlp"))
+    wo = shard(p["wo"], ("expert", "mlp", None))
+    h = apply_act(jnp.einsum("becd,edf->becf", buf, wi_g), cfg) \
+        * jnp.einsum("becd,edf->becf", buf, wi_u)
+    h = shard(h, ("batch", "expert", None, "mlp"))
+    y_e = jnp.einsum("becf,efd->becd", h, wo)                 # (B,E,C,d)
+    y_e = shard(y_e, ("batch", "expert", None, None))
+
+    gathered = shard(y_e[bidx, e_sorted, jnp.minimum(pos_in_e, C - 1)],
+                     ("batch", None, None))
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    contrib = shard(gathered * jnp.take_along_axis(
+        flat_p, order, -1)[..., None].astype(gathered.dtype),
+        ("batch", None, None))
+    y = jnp.zeros((B, T, d), contrib.dtype).at[bidx, tok_sorted].add(
+        contrib)
+    y = shard(y, ("batch", "seq", None))
+
+    if m.n_shared_experts:
+        sh = apply_act(x @ p["shared_wi_gate"], cfg) * (
+            x @ p["shared_wi_up"])
+        y = y + sh @ p["shared_wo"]
+    return y.astype(x.dtype), aux

@@ -1,0 +1,68 @@
+"""Single-source-of-truth parameter declaration.
+
+Modules declare a pytree of ``PSpec`` (shape + logical axes + init law).
+From it we derive, congruently:
+  * materialized parameters (``init_tree`` — pure, works under eval_shape),
+  * logical-axes trees (``axes_tree``) that ``sharding.logical`` resolves
+    into PartitionSpecs for the dry-run / pjit shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple
+    axes: tuple            # logical axis names, same length as shape
+    init: str = "normal"   # normal | zeros | ones
+    scale: Optional[float] = None   # None => fan-in 1/sqrt(shape[-?])
+    fan_axis: int = 0      # which axis is fan-in for default scaling
+    dtype: Optional[str] = None     # override param dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def stack(tree, n: int):
+    """Prepend a ("layers", n) scan dimension to every PSpec in tree."""
+    return jax.tree.map(
+        lambda p: PSpec((n,) + p.shape, ("layers",) + p.axes, p.init,
+                        p.scale, p.fan_axis + 1, p.dtype),
+        tree, is_leaf=is_pspec)
+
+
+def init_tree(tree, rng, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_pspec)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for r, p in zip(rngs, leaves):
+        dt = jnp.dtype(p.dtype) if p.dtype else dtype
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dt))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dt))
+        else:
+            scale = p.scale
+            if scale is None:
+                fan = max(int(p.shape[p.fan_axis]), 1)
+                scale = fan ** -0.5
+            out.append((jax.random.normal(r, p.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_pspec)
+
+
+def shape_tree(tree):
+    return jax.tree.map(lambda p: p.shape, tree, is_leaf=is_pspec)

@@ -1,0 +1,324 @@
+"""State-space / linear-attention blocks: RWKV6 (Finch) and Mamba2.
+
+Both are expressed through one *chunked* scan utility
+(``chunked_linear_attention``): the sequence is processed in pages
+(chunks) with O(state) carry — the SSM counterpart of the paper's paged
+streaming (compute over one page while the recurrent state, not a giant
+cache, carries history). Decode is the exact single-step recurrence.
+
+RWKV6 time-mix (per head h, head size N):
+    out_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ          (w_t data-dependent)
+Mamba2 (SSD, scalar-per-head decay):
+    S_t = a_t S_{t-1} + dt_t · x_t B_tᵀ ;  y_t = S_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PSpec
+from repro.sharding.context import shard
+
+
+# ------------------------------------------------------------------
+# shared chunked kernel (vector decay per key-dim; rwkv "bonus" optional)
+# ------------------------------------------------------------------
+# Per-token log-decay clamp: keeps exp(±Σ logw) inside fp32 range for the
+# factored chunk matmuls (chunk 16 × 5.0 = 80 < log(fp32_max) ≈ 88). The
+# single-step recurrence and the ref oracle apply the same clamp, so the
+# chunked and sequential paths agree bit-for-bit in semantics.
+LOGW_MIN = -5.0
+DEFAULT_CHUNK = 16
+
+
+def chunked_linear_attention(r, k, v, logw, state, u=None,
+                             chunk: int = DEFAULT_CHUNK,
+                             inclusive: bool = False):
+    """Chunkwise linear attention with per-(head,dim) decay.
+
+    r, k, logw: (B,T,H,N); v: (B,T,H,M); state: (B,H,N,M).
+    inclusive=False (RWKV): out_t reads S_{t-1}; the current token enters
+      only through the ``u`` bonus diag.
+    inclusive=True (Mamba2): out_t reads S_t (current token included,
+      undecayed).
+    Returns (out (B,T,H,M), final state fp32).
+    """
+    B, T, H, N = r.shape
+    M = v.shape[-1]
+    chunk = min(chunk, T)
+    Torig = T
+    pad = (-T) % chunk
+    if pad:
+        # zero k/v and logw=0 (decay 1) contribute nothing to state/out
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) *
+                                 (a.ndim - 2))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+        T = T + pad
+    nc = T // chunk
+    rc = r.reshape(B, nc, chunk, H, N)
+    kc = k.reshape(B, nc, chunk, H, N)
+    vc = v.reshape(B, nc, chunk, H, M)
+    wc = jnp.clip(logw.astype(jnp.float32), LOGW_MIN, 0.0
+                  ).reshape(B, nc, chunk, H, N)
+
+    def step(S, xs):
+        rb, kb, vb, wb = xs                     # (B,c,H,*)
+        S = shard(S, ("batch", "heads", None, None))
+        rb = shard(rb, ("batch", None, "heads", None))
+        cum = jnp.cumsum(wb, axis=1)            # inclusive log-decay prods
+        total = cum[:, -1]                      # (B,H,N)
+        # exponent for r side: cum_t (inclusive) or cum_{t-1} (exclusive)
+        r_exp = cum if inclusive else cum - wb
+        r_dec = rb.astype(jnp.float32) * jnp.exp(r_exp)
+        inter = jnp.einsum("bchn,bhnm->bchm", r_dec, S)
+        # midpoint-normalized factorization: both score factors stay
+        # within exp(±(chunk/2)·|LOGW_MIN|), doubling the safe chunk
+        mid = cum[:, chunk // 2][:, None]
+        r_mid = rb.astype(jnp.float32) * jnp.exp(r_exp - mid)
+        k_dec = kb.astype(jnp.float32) * jnp.exp(mid - cum)
+        scores = jnp.einsum("bchn,bdhn->bhcd", r_mid, k_dec)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool),
+                        0 if inclusive else -1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        if u is not None:   # rwkv bonus for the current token
+            diag = jnp.einsum("bchn,hn,bchn->bch",
+                              rb.astype(jnp.float32), u,
+                              kb.astype(jnp.float32))
+            scores = scores + jnp.einsum("bch,ct->bhct", diag,
+                                         jnp.eye(chunk, dtype=jnp.float32))
+        intra = jnp.einsum("bhcd,bdhm->bchm", scores,
+                           vb.astype(jnp.float32))
+        out = inter + intra
+        # state update: S' = diag(exp(total)) S + Σ_s (k_s exp(total-cum_s)) v_s
+        k_fut = kb.astype(jnp.float32) * jnp.exp(total[:, None] - cum)
+        S = jnp.exp(total)[..., None] * S + jnp.einsum(
+            "bchn,bchm->bhnm", k_fut, vb.astype(jnp.float32))
+        return S, out
+
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), wc.transpose(1, 0, 2, 3, 4))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, M)[:, :Torig]
+    return out.astype(v.dtype), state
+
+
+def linear_attention_step(r, k, v, logw, state, u=None,
+                          inclusive: bool = False):
+    """Exact single-token recurrence. r,k,logw: (B,H,N); v: (B,H,M)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    decay = jnp.exp(jnp.clip(logw.astype(jnp.float32), LOGW_MIN, 0.0)
+                    )[..., None]
+    if inclusive:           # mamba2: update state, then read it
+        state = decay * state + kv
+        out = jnp.einsum("bhn,bhnm->bhm", rf, state)
+    else:                   # rwkv: read S + u-bonus, then update
+        bonus = jnp.einsum("hn,bhnm->bhnm", u, kv) if u is not None else 0.0
+        out = jnp.einsum("bhn,bhnm->bhm", rf, state + bonus)
+        state = decay * state + kv
+    return out.astype(v.dtype), state
+
+
+# ------------------------------------------------------------------
+# RWKV6 block
+# ------------------------------------------------------------------
+def rwkv_pspecs(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    N = d // H
+    return {
+        "time": {
+            "wr": PSpec((d, d), ("embed", "qkv")),
+            "wk": PSpec((d, d), ("embed", "qkv")),
+            "wv": PSpec((d, d), ("embed", "qkv")),
+            "wg": PSpec((d, d), ("embed", "qkv")),
+            "ww": PSpec((d, d), ("embed", "qkv"), scale=0.01),
+            "w_bias": PSpec((H, N), ("heads", "head_dim"), "zeros"),
+            "u": PSpec((H, N), ("heads", "head_dim"), "zeros"),
+            "wo": PSpec((d, d), ("qkv", "embed")),
+            "mix": PSpec((5, d), (None, "embed_act"), "zeros"),
+        },
+        "channel": {
+            "wk": PSpec((d, cfg.d_ff), ("embed", "mlp")),
+            "wv": PSpec((cfg.d_ff, d), ("mlp", "embed")),
+            "wr": PSpec((d, d), ("embed", "qkv")),
+            "mix": PSpec((2, d), (None, "embed_act"), "zeros"),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """shift right by one; `last` (B,d) is the previous sequence tail."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state, chunk=0):
+    """x: (B,T,d); state: {"s": (B,H,N,N), "shift": (B,d)}."""
+    from repro.models import tuning as TU
+    chunk = chunk or TU.get().ssm_chunk
+    B, T, d = x.shape
+    H = cfg.n_heads
+    N = d // H
+    xs = _token_shift(x, state["shift"])
+    mix = jax.nn.sigmoid(p["mix"])          # (5,d) in (0,1)
+    def lerp(i):
+        return x + (xs - x) * mix[i]
+    # constrain projection outputs to (batch, seq, heads-on-model): GSPMD
+    # otherwise replicates them and partial-sum all-reduces 1 GB
+    # activations over `data` (measured: 99% of this cell's collectives)
+    proj = lambda w: shard((lerp_cache.pop(0) @ w).reshape(B, T, H, N),
+                           ("batch", "seq", "heads", None))
+    lerp_cache = [lerp(i) for i in range(5)]
+    r = proj(p["wr"])
+    k = proj(p["wk"])
+    v = proj(p["wv"])
+    g = jax.nn.silu(shard(lerp_cache.pop(0) @ p["wg"],
+                          ("batch", "seq", "qkv")))
+    logw = -jnp.exp(proj(p["ww"]).astype(jnp.float32)
+                    + p["w_bias"].astype(jnp.float32))
+    out, s = chunked_linear_attention(r, k, v, logw, state["s"],
+                                      u=p["u"].astype(jnp.float32),
+                                      chunk=chunk)
+    out = (out.reshape(B, T, d) * g) @ p["wo"]
+    return out, {"s": s, "shift": x[:, -1]}
+
+
+def rwkv_time_mix_step(p, x, cfg: ModelConfig, state):
+    """x: (B,d) single token."""
+    B, d = x.shape
+    H = cfg.n_heads
+    N = d // H
+    xs = state["shift"]
+    mix = jax.nn.sigmoid(p["mix"])
+    def lerp(i):
+        return x + (xs - x) * mix[i]
+    r = (lerp(0) @ p["wr"]).reshape(B, H, N)
+    k = (lerp(1) @ p["wk"]).reshape(B, H, N)
+    v = (lerp(2) @ p["wv"]).reshape(B, H, N)
+    g = jax.nn.silu(lerp(3) @ p["wg"])
+    logw = -jnp.exp((lerp(4) @ p["ww"]).astype(jnp.float32).reshape(B, H, N)
+                    + p["w_bias"].astype(jnp.float32))
+    out, s = linear_attention_step(r, k, v, logw, state["s"],
+                                   u=p["u"].astype(jnp.float32))
+    out = (out.reshape(B, d) * g) @ p["wo"]
+    return out, {"s": s, "shift": x}
+
+
+def rwkv_channel_mix(p, x, state_shift):
+    xs = _token_shift(x, state_shift) if x.ndim == 3 else state_shift
+    mix = jax.nn.sigmoid(p["mix"])
+    k = jax.nn.relu((x + (xs - x) * mix[0]) @ p["wk"]) ** 2
+    r = jax.nn.sigmoid((x + (xs - x) * mix[1]) @ p["wr"])
+    new_shift = x[:, -1] if x.ndim == 3 else x
+    return r * (k @ p["wv"]), new_shift
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H = cfg.n_heads
+    N = cfg.d_model // H
+    return {
+        "time": {"s": jnp.zeros((batch, H, N, N), jnp.float32),
+                 "shift": jnp.zeros((batch, cfg.d_model), dtype)},
+        "channel_shift": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv_state_axes(cfg: ModelConfig):
+    return {
+        "time": {"s": ("cache_batch", "heads", "head_dim", "head_dim"),
+                 "shift": ("cache_batch", "embed_act")},
+        "channel_shift": ("cache_batch", "embed_act"),
+    }
+
+
+# ------------------------------------------------------------------
+# Mamba2 block (zamba2)
+# ------------------------------------------------------------------
+def mamba2_pspecs(cfg: ModelConfig):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    return {
+        "in_proj": PSpec((d, 2 * d_in + 2 * s.d_state + nh),
+                         ("embed", "qkv")),
+        "conv_w": PSpec((s.d_conv, d_in + 2 * s.d_state), ("conv", "qkv")),
+        "A_log": PSpec((nh,), ("heads",), "zeros"),
+        "D": PSpec((nh,), ("heads",), "ones"),
+        "dt_bias": PSpec((nh,), ("heads",), "zeros"),
+        "out_proj": PSpec((d_in, d), ("qkv", "embed")),
+        "norm_scale": PSpec((d_in,), ("embed_act",), "ones", dtype="float32"),
+    }
+
+
+def _mamba_split(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    return d_in, nh, s.d_state
+
+
+def _causal_conv(x, w, conv_state=None):
+    """depthwise causal conv along T. x: (B,T,C); w: (K,C)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out, xp[:, -(K - 1):]
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, state, chunk=DEFAULT_CHUNK):
+    """x: (B,T,d); state: {"s": (B,nh,N,hd), "conv": (B,K-1,C)}."""
+    B, T, d = x.shape
+    d_in, nh, N = _mamba_split(cfg)
+    hd = cfg.ssm.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,nh)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (nh,)
+    logw = (dt * a)[..., None]                                    # (B,T,nh,1)
+    xheads = xin.reshape(B, T, nh, hd)
+    xh = xheads * dt[..., None].astype(xheads.dtype)
+    # r=C (queries), k=B (keys): state is (B, nh, N, hd)
+    r = jnp.broadcast_to(Cc[:, :, None, :], (B, T, nh, N))
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, T, nh, N))
+    logw = jnp.broadcast_to(logw, (B, T, nh, N))
+    out, s = chunked_linear_attention(r, k, xh, logw, state["s"],
+                                      chunk=chunk, inclusive=True)
+    out = out + xheads * p["D"].astype(xheads.dtype)[:, None]
+    out = out.reshape(B, T, d_in)
+    # gated RMSNorm then out-projection
+    varr = jnp.mean(jnp.square(out.astype(jnp.float32)), -1, keepdims=True)
+    out = (out.astype(jnp.float32) * jax.lax.rsqrt(varr + 1e-5)
+           * p["norm_scale"]).astype(x.dtype)
+    out = out * jax.nn.silu(z)
+    return out @ p["out_proj"], {"s": s, "conv": conv_state}
+
+
+def mamba2_step(p, x, cfg: ModelConfig, state):
+    out, st = mamba2_forward(p, x[:, None], cfg, state, chunk=1)
+    return out[:, 0], st
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d_in, nh, N = _mamba_split(cfg)
+    K = cfg.ssm.d_conv
+    return {
+        "s": jnp.zeros((batch, nh, N, cfg.ssm.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, d_in + 2 * N), dtype),
+    }
+
+
+def mamba_state_axes(cfg: ModelConfig):
+    return {"s": ("cache_batch", "heads", "state", "head_dim"),
+            "conv": ("cache_batch", "conv", "qkv")}

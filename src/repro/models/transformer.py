@@ -1,0 +1,309 @@
+"""Model assembly: decoder LMs (dense/MoE/MLA), encoder-decoder (whisper),
+hybrid (zamba2), and RWKV6 — all with scanned layer stacks so the lowered
+HLO is one layer body + ``lax.scan`` regardless of depth.
+
+Layer stacks are homogeneous per scan; heterogeneous stacks (deepseek's
+3 dense + 58 MoE layers) become two consecutive scans. Zamba2's SHARED
+attention block lives outside the scanned params and is applied every
+``attn_every`` layers via ``lax.cond`` with a per-invocation KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.params import PSpec, stack
+from repro.sharding.context import shard
+
+Params = Any
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# =====================================================================
+# per-family layer pspecs
+# =====================================================================
+def dense_layer_pspecs(cfg: ModelConfig, cross: bool = False):
+    p = {"ln1": L.norm_pspec(cfg),
+         "attn": (L.mla_pspecs(cfg) if cfg.mla else L.attention_pspecs(cfg)),
+         "ln2": L.norm_pspec(cfg),
+         "mlp": L.mlp_pspecs(cfg)}
+    if cross:
+        p["ln_x"] = L.norm_pspec(cfg)
+        p["xattn"] = L.attention_pspecs(cfg)
+    return p
+
+
+def moe_layer_pspecs(cfg: ModelConfig):
+    return {"ln1": L.norm_pspec(cfg),
+            "attn": (L.mla_pspecs(cfg) if cfg.mla else L.attention_pspecs(cfg)),
+            "ln2": L.norm_pspec(cfg),
+            "moe": MOE.moe_pspecs(cfg)}
+
+
+def rwkv_layer_pspecs(cfg: ModelConfig):
+    p = SSM.rwkv_pspecs(cfg)
+    return {"ln1": L.norm_pspec(cfg), "time": p["time"],
+            "ln2": L.norm_pspec(cfg), "channel": p["channel"]}
+
+
+def mamba_layer_pspecs(cfg: ModelConfig):
+    return {"ln1": L.norm_pspec(cfg), "mamba": SSM.mamba2_pspecs(cfg),
+            "ln2": L.norm_pspec(cfg), "mlp": L.mlp_pspecs(cfg)}
+
+
+def lm_pspecs(cfg: ModelConfig):
+    d, V = cfg.d_model, cfg.padded_vocab
+    p: dict = {"embed": PSpec((V, d), ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = PSpec((d, V), ("embed", "vocab"))
+    p["final_norm"] = L.norm_pspec(cfg)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = stack(dense_layer_pspecs(cfg), cfg.n_layers)
+    elif fam == "moe":
+        nd = cfg.moe.first_dense_layers
+        if nd:
+            p["dense_layers"] = stack(dense_layer_pspecs(cfg), nd)
+        p["layers"] = stack(moe_layer_pspecs(cfg), cfg.n_layers - nd)
+    elif fam == "ssm":
+        p["layers"] = stack(rwkv_layer_pspecs(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        p["layers"] = stack(mamba_layer_pspecs(cfg), cfg.n_layers)
+        p["shared_attn"] = {"ln": L.norm_pspec(cfg),
+                            "attn": L.attention_pspecs(cfg)}
+    elif fam == "audio":
+        p["enc_layers"] = stack(dense_layer_pspecs(cfg), cfg.n_encoder_layers)
+        p["enc_norm"] = L.norm_pspec(cfg)
+        p["layers"] = stack(dense_layer_pspecs(cfg, cross=True), cfg.n_layers)
+        p["pos_embed"] = PSpec((cfg.max_train_seq * 8, d), (None, "embed"),
+                               scale=0.02)
+    else:
+        raise ValueError(fam)
+    if cfg.mtp:
+        p["mtp"] = {"proj": PSpec((2 * d, d), ("embed", "embed_act")),
+                    "block": dense_layer_pspecs(cfg),
+                    "norm_h": L.norm_pspec(cfg), "norm_e": L.norm_pspec(cfg)}
+    return p
+
+
+# =====================================================================
+# layer bodies (train / prefill path: full sequence)
+# =====================================================================
+def _attn_block(lp, x, cfg, positions):
+    x = shard(x, ("batch", "seq", "embed_act"))
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    if cfg.mla:
+        a, _ = L.mla_train(lp["attn"], h, cfg, positions)
+    else:
+        a, _ = L.attention_train(lp["attn"], h, cfg, positions)
+    return x + a
+
+
+def dense_layer_fwd(lp, x, cfg, positions):
+    x = _attn_block(lp, x, cfg, positions)
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    return shard(x + L.apply_mlp(lp["mlp"], h, cfg),
+                 ("batch", "seq", "embed_act"))
+
+
+def moe_layer_fwd(lp, x, cfg, positions):
+    x = _attn_block(lp, x, cfg, positions)
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    y, aux = MOE.apply_moe(lp["moe"], h, cfg)
+    return x + y, aux
+
+
+def rwkv_layer_fwd(lp, x, cfg, state):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    t, tstate = SSM.rwkv_time_mix(lp["time"], h, cfg, state["time"])
+    x = x + t
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    c, cshift = SSM.rwkv_channel_mix(lp["channel"], h, state["channel_shift"])
+    return x + c, {"time": tstate, "channel_shift": cshift}
+
+
+def mamba_layer_fwd(lp, x, cfg, state):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    m, mstate = SSM.mamba2_forward(lp["mamba"], h, cfg, state)
+    x = x + m
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    return x + L.apply_mlp(lp["mlp"], h, cfg), mstate
+
+
+# =====================================================================
+# forward (train): tokens/embeddings -> final hidden states (+ aux)
+# =====================================================================
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    return params["embed"][tokens].astype(jnp.bfloat16)
+
+
+def forward_train(params, cfg: ModelConfig, batch, remat="full"):
+    """Returns (hidden (B,T,d), aux_loss scalar, extras dict)."""
+    if cfg.family == "audio":
+        return _forward_train_encdec(params, cfg, batch, remat)
+    if cfg.embedding_inputs and "embeddings" in batch:
+        x = batch["embeddings"].astype(jnp.bfloat16)
+    else:
+        x = embed_tokens(params, cfg, batch["tokens"])
+    B, T, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        body = _remat(lambda x, lp: (dense_layer_fwd(lp, x, cfg, positions),
+                                     None), remat)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif fam == "moe":
+        if cfg.moe.first_dense_layers:
+            body = _remat(lambda x, lp: (
+                dense_layer_fwd(lp, x, cfg, positions), None), remat)
+            x, _ = jax.lax.scan(body, x, params["dense_layers"])
+        def moe_body(x, lp):
+            y, aux = moe_layer_fwd(lp, x, cfg, positions)
+            return y, aux
+        x, auxs = jax.lax.scan(_remat(moe_body, remat), x, params["layers"])
+        aux_total = aux_total + auxs.sum()
+    elif fam == "ssm":
+        state0 = SSM.init_rwkv_state(cfg, B, x.dtype)
+        def body(x, args):
+            lp = args
+            y, _ = rwkv_layer_fwd(lp, x, cfg, state0)
+            return y, None
+        x, _ = jax.lax.scan(_remat(body, remat), x, params["layers"])
+    elif fam == "hybrid":
+        st0 = SSM.init_mamba_state(cfg, B)
+        shared = params["shared_attn"]
+        every = cfg.ssm.attn_every
+        def body(carry, args):
+            x, idx = carry
+            lp = args
+            def with_attn(x):
+                h = L.apply_norm(shared["ln"], x, cfg)
+                a, _ = L.attention_train(shared["attn"], h, cfg, positions)
+                return x + a
+            x = jax.lax.cond(idx % every == 0, with_attn, lambda x: x, x)
+            y, _ = mamba_layer_fwd(lp, x, cfg, st0)
+            return (y, idx + 1), None
+        body = _remat(body, remat)
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)),
+                                 params["layers"])
+    else:
+        raise ValueError(fam)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x, aux_total, {}
+
+
+def _forward_train_encdec(params, cfg: ModelConfig, batch, remat):
+    frames = batch["audio_frames"].astype(jnp.bfloat16)
+    B, Te, d = frames.shape
+    pos_e = jnp.broadcast_to(jnp.arange(Te), (B, Te))
+    enc_body = _remat(lambda x, lp: (
+        dense_layer_fwd_nocausal(lp, x, cfg, pos_e), None), remat)
+    enc, _ = jax.lax.scan(enc_body, frames, params["enc_layers"])
+    enc = L.apply_norm(params["enc_norm"], enc, cfg)
+
+    tokens = batch["tokens"]
+    Bd, Td = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    x = x + params["pos_embed"][:Td].astype(x.dtype)
+    pos_d = jnp.broadcast_to(jnp.arange(Td), (Bd, Td))
+
+    def dec_body(x, lp):
+        x = _attn_block(lp, x, cfg, pos_d)
+        h = L.apply_norm(lp["ln_x"], x, cfg)
+        kx = jnp.einsum("btd,dhk->bthk", enc, lp["xattn"]["wk"])
+        vx = jnp.einsum("btd,dhk->bthk", enc, lp["xattn"]["wv"])
+        a, _ = L.attention_train(lp["xattn"], h, cfg, pos_d, causal=False,
+                                 kv=(kx, vx))
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        return x + L.apply_mlp(lp["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(_remat(dec_body, remat), x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x, jnp.zeros((), jnp.float32), {"encoder_out": enc}
+
+
+def dense_layer_fwd_nocausal(lp, x, cfg, positions):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    a, _ = L.attention_train(lp["attn"], h, cfg, positions, causal=False)
+    x = x + a
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    return x + L.apply_mlp(lp["mlp"], h, cfg)
+
+
+# =====================================================================
+# loss (chunked cross-entropy: logits are streamed in T-pages, never
+# materialized as (B, T, V) — the loss-level page streaming)
+# =====================================================================
+def lm_head(params, cfg: ModelConfig, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w.astype(h.dtype)
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, h, labels,
+                    t_chunk: int = 0):
+    """h: (B,T,d); labels: (B,T) int32 (-1 = ignore). Mean CE over valid."""
+    from repro.models import tuning as TU
+    B, T, d = h.shape
+    V = cfg.padded_vocab
+    t_chunk = min(t_chunk or TU.get().ce_chunk, T)
+    pad = (-T) % t_chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (T + pad) // t_chunk
+    hc = h.reshape(B, nc, t_chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, t_chunk).transpose(1, 0, 2)
+
+    def one(args):
+        hb, lb = args
+        hb = shard(hb, ("batch", None, "embed_act"))
+        logits = lm_head(params, cfg, hb).astype(jnp.float32)
+        logits = shard(logits, ("batch", None, "vocab"))
+        if cfg.padded_vocab != cfg.vocab_size:
+            mask = jnp.arange(V) < cfg.vocab_size
+            logits = jnp.where(mask, logits, L.NEG_INF)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        return ((lse - gold) * valid).sum(), valid.sum()
+
+    losses, counts = jax.lax.map(one, (hc, lc))
+    return losses.sum() / jnp.maximum(counts.sum(), 1.0)
+
+
+def mtp_loss(params, cfg: ModelConfig, h, batch):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from
+    [norm(h_t); norm(Emb(tok_{t+1}))]."""
+    mp = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, T = tokens.shape
+    nxt = jnp.concatenate([tokens[:, 1:], tokens[:, :1] * 0], axis=1)
+    e = embed_tokens(params, cfg, nxt)
+    hh = jnp.concatenate([L.apply_norm(mp["norm_h"], h, cfg),
+                          L.apply_norm(mp["norm_e"], e, cfg)], axis=-1)
+    x = hh @ mp["proj"]
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = dense_layer_fwd(mp["block"], x, cfg, positions)
+    lbl2 = jnp.concatenate([labels[:, 1:],
+                            jnp.full_like(labels[:, :1], -1)], axis=1)
+    return chunked_ce_loss(params, cfg, x, lbl2)

@@ -1,0 +1,42 @@
+"""Trace-time performance-tuning context (the hillclimbing knobs).
+
+Model code reads chunk sizes / cache dtypes from here so the launcher
+can sweep them per (arch × shape) cell without touching architecture
+configs. Defaults reproduce the baseline.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class Tuning:
+    q_chunk: int = 512             # chunked-attention query page
+    kv_chunk: int = 1024           # chunked-attention KV page
+    ce_chunk: int = 512            # chunked cross-entropy T page
+    ssm_chunk: int = 16            # linear-attention chunk
+    kv_cache_quant: bool = False   # INT8 paged KV (per-token scales)
+    moe_cap_axis: Optional[str] = None   # shard the MoE capacity dim
+    moe_local_dispatch: bool = False     # row-local (batch-sharded) dispatch
+
+
+DEFAULT = Tuning()
+
+
+def get() -> Tuning:
+    return getattr(_STATE, "tuning", DEFAULT)
+
+
+@contextlib.contextmanager
+def tuning_context(t: Tuning):
+    prev = get()
+    _STATE.tuning = t
+    try:
+        yield
+    finally:
+        _STATE.tuning = prev

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Adafactor,
+    AdamW,
+    cosine_schedule,
+    get_optimizer,
+)

@@ -1,0 +1,153 @@
+"""Sharded optimizers: AdamW (fp32 moments) and Adafactor (factored 2nd
+moment — the memory-sane choice for the 100B+ training cells).
+
+Pure-pytree API:
+    opt.init(params) -> state            (eval_shape-able)
+    opt.update(grads, state, params, lr) -> (new_params, new_state)
+    opt.state_axes(param_axes) -> logical-axes tree congruent with state
+Global-norm clipping is fused into ``update``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _clip_by_global_norm(grads, max_norm):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        grads, gnorm = _clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": m, "v": v, "step": step}, {"grad_norm": gnorm}
+
+    def state_axes(self, param_axes):
+        return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), no
+    momentum: O(params/row + params/col) state instead of 2×params."""
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_norm: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factored: int = 2
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= self.min_dim_factored
+
+    def init(self, params):
+        def st(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(st, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        grads, gnorm = _clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-self.decay)
+
+        def upd(g, sl, p):
+            g2 = jnp.square(g) + self.eps
+            if self._factored(p.shape):
+                vr = beta * sl["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * sl["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], self.eps))
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, self.eps))
+                new_sl = {"vr": vr, "vc": vc}
+            else:
+                v = beta * sl["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, self.eps))
+                new_sl = {"v": v}
+            # update clipping (RMS <= 1), per the paper
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return new_sl, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        is_slot = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        sl_leaves = jax.tree.flatten(state["slots"], is_leaf=is_slot)[0]
+        out = [upd(g, sl, p) for g, sl, p in
+               zip(g_leaves, sl_leaves, p_leaves)]
+        slots = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_p = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_p, {"slots": slots, "step": step}, {"grad_norm": gnorm}
+
+    def state_axes(self, param_axes):
+        def ax(a):
+            if len(a) >= self.min_dim_factored:
+                return {"vr": a[:-1], "vc": a[:-2] + a[-1:]}
+            return {"v": a}
+        return {"slots": jax.tree.map(
+                    ax, param_axes,
+                    is_leaf=lambda x: isinstance(x, tuple) and all(
+                        isinstance(e, (str, type(None))) for e in x)),
+                "step": ()}
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise KeyError(name)

@@ -1,0 +1,135 @@
+"""Paged KV cache — the SMMU/page-table design applied to serving.
+
+A global pool of fixed-size pages (4 KB-aligned: page_tokens × KH × hd
+× bytes is a page multiple) plus a per-sequence page table. Allocation
+is host-side (free-list); the device only ever sees (pool, table, lens)
+— exactly the paper's split: translation/orchestration in the system,
+streaming compute in the accelerator. Consumed by
+``kernels.paged_attention``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PagedCacheConfig:
+    n_pages: int
+    page_tokens: int
+    n_kv_heads: int
+    head_dim: int
+    max_pages_per_seq: int
+    dtype: str = "bfloat16"
+
+    @property
+    def page_bytes(self) -> int:
+        return self.page_tokens * self.n_kv_heads * self.head_dim * \
+            jnp.dtype(self.dtype).itemsize
+
+
+class PagedKVCache:
+    """One layer's paged K/V pool + page tables for up to S sequences."""
+
+    def __init__(self, cfg: PagedCacheConfig, max_seqs: int):
+        self.cfg = cfg
+        self.max_seqs = max_seqs
+        shape = (cfg.n_pages, cfg.page_tokens, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self.k_pages = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        self.v_pages = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        # host-side bookkeeping (the "driver")
+        self._free = list(range(cfg.n_pages - 1, -1, -1))
+        self.tables = np.zeros((max_seqs, cfg.max_pages_per_seq), np.int32)
+        self.lens = np.zeros((max_seqs,), np.int32)
+        self.held = np.zeros((max_seqs,), np.int32)   # pages per slot
+        self.active = np.zeros((max_seqs,), bool)
+
+    # --------------------------------------------------- slot lifecycle
+    def alloc_seq(self, slot: int, prompt_len: int) -> bool:
+        n_pages = -(-max(prompt_len, 1) // self.cfg.page_tokens)
+        if n_pages > len(self._free) or \
+                n_pages > self.cfg.max_pages_per_seq:
+            return False
+        self.tables[slot, :] = 0
+        for i in range(n_pages):
+            self.tables[slot, i] = self._free.pop()
+        self.lens[slot] = 0
+        self.held[slot] = n_pages
+        self.active[slot] = True
+        return True
+
+    def free_seq(self, slot: int):
+        for i in range(int(self.held[slot])):
+            self._free.append(int(self.tables[slot, i]))
+        self.lens[slot] = 0
+        self.held[slot] = 0
+        self.active[slot] = False
+
+    def ensure_capacity(self, slot: int, new_len: int) -> bool:
+        """Grow the table if the next token crosses a page boundary."""
+        have = int(self.held[slot])
+        need = -(-new_len // self.cfg.page_tokens)
+        if need > self.cfg.max_pages_per_seq:
+            return False
+        while have < need:
+            if not self._free:
+                return False
+            self.tables[slot, have] = self._free.pop()
+            have += 1
+        self.held[slot] = have
+        return True
+
+    # --------------------------------------------------------- writes
+    def write_prompt(self, slot: int, k: jnp.ndarray, v: jnp.ndarray):
+        """k, v: (T, KH, hd) — scatter prompt KV into this slot's pages."""
+        T = k.shape[0]
+        if not self.ensure_capacity(slot, T):
+            raise RuntimeError("out of KV pages")
+        pt = self.cfg.page_tokens
+        n_pages = -(-T // pt)
+        pad = n_pages * pt - T
+        kp = jnp.pad(k, ((0, pad), (0, 0), (0, 0))).reshape(
+            n_pages, pt, *k.shape[1:])
+        vp = jnp.pad(v, ((0, pad), (0, 0), (0, 0))).reshape(
+            n_pages, pt, *v.shape[1:])
+        idx = self.tables[slot, :n_pages]
+        self.k_pages = self.k_pages.at[idx].set(kp.astype(self.k_pages.dtype))
+        self.v_pages = self.v_pages.at[idx].set(vp.astype(self.v_pages.dtype))
+        self.lens[slot] = T
+
+    def append_token(self, slots: np.ndarray, k: jnp.ndarray,
+                     v: jnp.ndarray):
+        """k, v: (B, KH, hd) for the given slots; one token each."""
+        pt = self.cfg.page_tokens
+        for b, slot in enumerate(slots):
+            if not self.active[slot]:
+                continue
+            new_len = int(self.lens[slot]) + 1
+            if not self.ensure_capacity(slot, new_len):
+                raise RuntimeError("out of KV pages")
+        pages = np.array([
+            self.tables[s, int(self.lens[s]) // pt] for s in slots],
+            np.int32)
+        offs = np.array([int(self.lens[s]) % pt for s in slots], np.int32)
+        self.k_pages = self.k_pages.at[pages, offs].set(
+            k.astype(self.k_pages.dtype))
+        self.v_pages = self.v_pages.at[pages, offs].set(
+            v.astype(self.v_pages.dtype))
+        for s in slots:
+            if self.active[s]:
+                self.lens[s] += 1
+
+    # ---------------------------------------------------------- reads
+    def device_views(self, slots: np.ndarray):
+        table = jnp.asarray(self.tables[slots])
+        lens = jnp.asarray(self.lens[slots])
+        return self.k_pages, self.v_pages, table, lens
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.cfg.n_pages - len(self._free)

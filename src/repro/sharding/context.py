@@ -1,0 +1,47 @@
+"""Trace-time sharding context: lets model code emit
+``with_sharding_constraint`` on activations using *logical* axis names,
+without threading mesh/rules through every function signature.
+
+GSPMD does not reliably propagate shardings into ``lax.scan``/``lax.map``
+bodies (we measured 16× replicated compute in chunked attention without
+constraints), so the model sprinkles ``shard(x, axes)`` at loop-body
+boundaries. Outside a context (unit tests, smoke runs) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding import logical as LG
+
+_STATE = threading.local()
+
+
+def current():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules):
+    prev = current()
+    _STATE.ctx = (mesh, rules,
+                  dict(zip(mesh.axis_names, mesh.devices.shape)))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def shard(x, axes):
+    """Constrain activation ``x`` to the logical ``axes`` under the active
+    mesh context (no-op without one). ``axes`` length must match x.ndim."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules, ms = ctx
+    spec = LG.spec_for(axes, x.shape, rules, ms)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation dimension carries a *logical* name
+("embed", "heads", "mlp", "vocab", "expert", "batch", "cache_seq", ...).
+A rule table maps logical names to physical mesh axes; ``spec_for``
+resolves a tuple of logical names into a ``PartitionSpec`` while
+enforcing (a) each mesh axis is claimed at most once, and (b) a dim is
+only sharded if its size divides the mesh-axis extent (GSPMD would pad
+otherwise, silently wasting memory — we prefer replication + an entry in
+the roofline notes).
+
+Physical axes: ``("pod", "data", "model")`` multi-pod, ``("data",
+"model")`` single-pod. Weights are FSDP-sharded over ``data`` and
+TP-sharded over ``model``; ``pod`` is pure data-parallel over DCN.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Default logical->physical mapping. Tuples mean "shard over several axes".
+# Order in PRIORITY decides who wins when two dims of one tensor want the
+# same mesh axis (first claim wins, later claims are dropped).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                # activations' seq dim: unsharded by default
+    # decode KV/state cache seq dim: claims `model` ONLY when the kv-head
+    # dims could not (GQA with few KV heads) — see PRIORITY
+    "cache_seq": ("model",),
+    "cache_batch": ("pod", "data"),
+    # weights
+    "expert": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv": ("model",),        # fused heads*head_dim projections
+    "seq_q": ("model",),      # query-chunk dim: claims model ONLY when the
+                              # head dims could not (GQA with few heads) —
+                              # sequence-parallel attention fallback
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "embed": ("data",),       # FSDP axis for weights
+    "embed_act": (),          # activations' model dim
+    "head_dim": (),
+    "state": (),
+    "layers": (),             # stacked-scan leading dim
+    "conv": (),
+    "lora": (),               # MLA latent dims
+    "moe_cap": (),            # MoE capacity dim (hillclimb: -> data)
+}
+
+# Context-parallel variant for long_500k decode (batch=1): shard the cache
+# sequence instead of batch, keep heads on model.
+LONG_CONTEXT_OVERRIDES: dict[str, tuple[str, ...]] = {
+    "batch": (),
+    "cache_batch": (),
+    "cache_seq": ("data",),
+}
+
+PRIORITY = [
+    "expert", "heads", "qkv", "kv_heads", "seq_q", "vocab", "mlp",
+    "moe_cap", "cache_seq", "cache_batch", "batch", "embed", "seq",
+    "embed_act", "head_dim", "state", "layers", "conv", "lora",
+]
+_PRIO = {n: i for i, n in enumerate(PRIORITY)}
+
+
+def make_rules(multi_pod: bool, long_context: bool = False,
+               overrides: Optional[Mapping[str, tuple[str, ...]]] = None,
+               ) -> dict[str, tuple[str, ...]]:
+    rules = dict(DEFAULT_RULES)
+    if long_context:
+        rules.update(LONG_CONTEXT_OVERRIDES)
+    if overrides:
+        rules.update(overrides)
+    if not multi_pod:
+        rules = {k: tuple(a for a in v if a != "pod") for k, v in rules.items()}
+    return rules
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             shape: Sequence[int],
+             rules: Mapping[str, tuple[str, ...]],
+             mesh_shape: Mapping[str, int]) -> P:
+    """Resolve logical axes + concrete shape into a PartitionSpec."""
+    assert len(axes) == len(shape), (axes, shape)
+    # Claim mesh axes in priority order.
+    order = sorted(range(len(axes)),
+                   key=lambda i: _PRIO.get(axes[i] or "", len(PRIORITY)))
+    taken: set[str] = set()
+    out: list = [None] * len(axes)
+    for i in order:
+        name = axes[i]
+        if name is None:
+            continue
+        want = [a for a in rules.get(name, ()) if a in mesh_shape]
+        got: list[str] = []
+        extent = 1
+        for a in want:
+            if a in taken:
+                continue
+            if shape[i] % (extent * mesh_shape[a]) != 0:
+                continue   # would need padding: replicate instead
+            got.append(a)
+            extent *= mesh_shape[a]
+        if got:
+            taken.update(got)
+            out[i] = tuple(got) if len(got) > 1 else got[0]
+    return P(*out)
+
+
+def sharding_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+                 rules: Mapping[str, tuple[str, ...]], mesh: Mesh,
+                 ) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, shape, rules, dict(zip(mesh.axis_names, mesh.devices.shape))))
+
+
+def tree_specs(axes_tree, shape_tree, rules, mesh_shape):
+    """Map spec_for over congruent pytrees of logical-axes tuples / shapes."""
+    return jax.tree.map(
+        lambda axes, shp: spec_for(axes, shp, rules, mesh_shape),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see exactly ONE device (the dry-run sets its own count in a
+# subprocess); keep memory modest on the CI box
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

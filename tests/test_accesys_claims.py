@@ -1,0 +1,27 @@
+"""The faithful-reproduction scorecard: every paper headline must PASS."""
+import pytest
+
+from repro.accesys.calibration import validate
+
+
+@pytest.fixture(scope="module")
+def claims():
+    return validate(fast=True)
+
+
+def test_all_fast_claims_pass(claims):
+    failing = [c.row() for c in claims if not c.ok]
+    assert not failing, "\n".join(failing)
+
+
+def test_table9_rows_within_12pct(claims):
+    rows = [c for c in claims if c.name.startswith("table9")]
+    assert len(rows) == 6
+    for c in rows:
+        assert c.ok, c.row()
+
+
+@pytest.mark.slow
+def test_full_claims_including_fig10_fig13():
+    failing = [c.row() for c in validate(fast=False) if not c.ok]
+    assert not failing, "\n".join(failing)

@@ -1,0 +1,47 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 16), jnp.bfloat16),
+                       "b": jnp.arange(16, dtype=jnp.float32)},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    st = _state()
+    mgr.save(st, 3)
+    restored, step = mgr.restore(jax.eval_shape(lambda: st))
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_keep_n_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in (1, 5, 9):
+        mgr.save(_state(s), s)
+    assert mgr.all_steps() == [5, 9]
+    assert mgr.latest_step() == 9
+
+
+def test_async_save_waits(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(_state(), 1)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs never count as checkpoints (atomicity)."""
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    (tmp_path / ".tmp_step_00000007").mkdir()
+    assert mgr.latest_step() is None

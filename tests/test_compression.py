@@ -1,0 +1,26 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import compression as GC
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Accumulated dequantized grads converge to accumulated true grads."""
+    g = {"w": jnp.full((32, 32), 0.001, jnp.float32) +
+         jax.random.normal(jax.random.PRNGKey(0), (32, 32)) * 1e-5}
+    ef = GC.init_ef(g)
+    total_dq = jnp.zeros((32, 32))
+    n = 50
+    for _ in range(n):
+        dq, ef = GC.apply_compression(g, ef)
+        total_dq = total_dq + dq["w"]
+    np.testing.assert_allclose(total_dq / n, g["w"], rtol=0.02, atol=1e-5)
+
+
+def test_quantization_error_bounded():
+    x = {"w": jax.random.normal(jax.random.PRNGKey(1), (64,)) * 3}
+    qs, scales, _ = GC.compress(x, GC.init_ef(x))
+    dq = GC.decompress(qs, scales)
+    err = jnp.abs(dq["w"] - x["w"]).max()
+    assert float(err) <= float(scales["w"]) * 0.5 + 1e-6

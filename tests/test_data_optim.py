@@ -1,0 +1,49 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import Adafactor, AdamW, cosine_schedule
+
+
+def _quad_losses(opt, steps=60):
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    state = opt.init(params)
+    lr = cosine_schedule(0.3, 5, steps)
+    losses = []
+    for s in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = opt.update(grads, state, params, lr(s))
+        losses.append(float(jnp.mean((params["w"] - target) ** 2)))
+    return losses
+
+
+def test_adamw_converges_quadratic():
+    losses = _quad_losses(AdamW(weight_decay=0.0))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_adafactor_converges_quadratic():
+    losses = _quad_losses(Adafactor())
+    assert losses[-1] < 0.1 * losses[0]
+
+
+def test_adafactor_state_is_factored():
+    opt = Adafactor()
+    st = opt.init({"w": jnp.zeros((64, 128))})
+    slots = st["slots"]["w"]
+    assert slots["vr"].shape == (64,) and slots["vc"].shape == (128,)
+
+
+def test_optimizer_state_axes_congruent():
+    from repro.configs import get_reduced
+    from repro.models.model import Model
+    m = Model(get_reduced("qwen2_0_5b"))
+    params = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    for opt in (AdamW(), Adafactor()):
+        st = jax.eval_shape(opt.init, params)
+        ax = opt.state_axes(m.param_axes())
+        # structure congruence: same tree paths resolve
+        jax.tree.map(lambda *_: None, st, ax,
+                     is_leaf=lambda x: isinstance(x, tuple))

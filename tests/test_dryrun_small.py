@@ -1,0 +1,46 @@
+"""The dry-run machinery end-to-end in a subprocess with 8 fake devices
+(a scaled-down production mesh) — proves lower+compile+roofline works
+outside the big sweep."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+import jax
+from repro.configs import get_config, SHAPES
+from repro.configs.base import RunConfig
+from repro.launch.steps import build_step
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(data=2, model=4)
+run = RunConfig(model=get_config("qwen2_0_5b"), shape=SHAPES["decode_32k"])
+built = build_step(run, mesh)
+with mesh:
+    lowered = jax.jit(built.fn, in_shardings=built.in_shardings,
+                      out_shardings=built.out_shardings,
+                      donate_argnums=built.donate_argnums).lower(*built.abstract_inputs)
+    compiled = lowered.compile()
+cost = compiled.cost_analysis()
+rl = RL.compute_roofline(cost, compiled.as_text(), 8,
+                         RL.model_flops_for(run.model, run.shape),
+                         compiled.memory_analysis())
+assert rl.compute_s > 0 and rl.bytes_per_device > 0
+print("DRYRUN_OK", rl.bottleneck)
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert "DRYRUN_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]

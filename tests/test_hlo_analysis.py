@@ -1,0 +1,41 @@
+"""The dry-run profiler must multiply loop bodies by trip count."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _compile_scan(n_iters):
+    w = jnp.zeros((64, 64), jnp.float32)
+
+    def step(x, _):
+        return jnp.tanh(x @ w), None
+
+    def fn(x):
+        y, _ = jax.lax.scan(step, x, None, length=n_iters)
+        return y
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+
+
+def test_flops_scale_with_trip_count():
+    c2 = analyze(_compile_scan(2).as_text())
+    c8 = analyze(_compile_scan(8).as_text())
+    # per-iteration dot = 2*8*64*64; the 8-iter module must report ~4x
+    ratio = c8.flops / max(c2.flops, 1)
+    assert 3.0 < ratio < 5.0, ratio
+
+
+def test_collectives_parsed_with_groups():
+    text = """
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  ROOT %ar = f32[16,16]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    c = analyze(text)
+    assert c.coll_count == 1
+    assert c.coll_bytes == 16 * 16 * 4
+    # ring all-reduce: 2 * bytes * (g-1)/g
+    assert abs(c.coll_effective - 2 * 1024 * 0.75) < 1e-6

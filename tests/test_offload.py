@@ -1,0 +1,27 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modes import MemoryMode
+from repro.core.offload import LayerStreamer
+
+
+def test_layer_streaming_all_modes_equal():
+    L, d = 6, 32
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(0), (L, d, d),
+                                      jnp.float32) * 0.2}
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (4, d), jnp.float32)
+    fn = lambda p, x: jnp.tanh(x @ p["w"])
+    outs, reports = {}, {}
+    for mode in MemoryMode:
+        streamer = LayerStreamer(stacked, L, mode, cache_layers=2)
+        out, rep = streamer.run(fn, x0)
+        outs[mode] = np.asarray(out)
+        reports[mode] = rep
+    np.testing.assert_allclose(outs[MemoryMode.DM],
+                               outs[MemoryMode.DEVMEM], rtol=1e-6)
+    np.testing.assert_allclose(outs[MemoryMode.DC],
+                               outs[MemoryMode.DEVMEM], rtol=1e-6)
+    assert reports[MemoryMode.DEVMEM].bytes_streamed == 0
+    assert reports[MemoryMode.DM].bytes_streamed >= \
+        reports[MemoryMode.DC].bytes_streamed

@@ -1,0 +1,81 @@
+"""Hypothesis property tests on the paging/tiling invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import overlap, paging, streaming
+from repro.core.modes import MemoryMode
+
+DTYPES = [np.float32, np.float16, np.int8]
+
+
+@settings(max_examples=30, deadline=None)
+@given(r=st.integers(1, 200), c=st.integers(1, 200),
+       dt=st.sampled_from(DTYPES), op=st.sampled_from(["A", "B"]))
+def test_pack_unpack_roundtrip(r, c, dt, op):
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((r, c)) * 10).astype(dt)
+    lay = paging.layout_for(x.shape, x.dtype, op)
+    pages = paging.pack_pages(jnp.asarray(x), lay)
+    assert pages.shape[0] == lay.n_pages
+    # every page holds exactly one OS page worth of elements
+    assert pages.shape[1] * pages.shape[2] * x.dtype.itemsize == \
+        paging.PAGE_BYTES
+    back = paging.unpack_pages(pages, lay)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(1, 300), c=st.integers(1, 300),
+       dt=st.sampled_from(DTYPES))
+def test_page_of_is_a_partition(r, c, dt):
+    lay = paging.layout_for((r, c), np.dtype(dt), "B")
+    seen = {}
+    for rr in range(0, r, lay.tile_r):
+        for cc in range(0, c, lay.tile_c):
+            pid = lay.page_of(rr, cc)
+            assert 0 <= pid < lay.n_pages
+            assert pid not in seen
+            seen[pid] = (rr, cc)
+    assert len(seen) == lay.n_pages
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 100), n=st.integers(1, 100), k=st.integers(1, 400))
+def test_schedule_covers_every_output_tile_once(m, n, k):
+    counts = streaming.tile_counts(m, n, k, np.float32)
+    seen = {}
+    for op in streaming.schedule(m, n, k, np.float32):
+        key = (op.i, op.j)
+        if op.first_k:
+            assert key not in seen
+            seen[key] = 0
+        seen[key] += 1
+    assert len(seen) == counts["out_tiles"]
+    assert all(v == counts["k_steps"] for v in seen.values())
+
+
+@settings(max_examples=10, deadline=None)
+@given(w=st.sampled_from([8, 16, 32]), l=st.integers(4, 2048),
+       s=st.sampled_from([1, 2, 4]))
+def test_overlap_bound_below_asymptote(w, l, s):
+    req = overlap.required_bandwidth(w, l, 1e9, s)
+    asym = overlap.asymptotic_bandwidth(w, 1e9, s)
+    assert req < asym
+    # monotone increasing in L (fill/drain slack shrinks)
+    assert overlap.required_bandwidth(w, l + 1, 1e9, s) >= req
+
+
+def test_streamed_gemm_matches_numpy_all_modes():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((33, 100)).astype(np.float32)
+    b = rng.standard_normal((100, 41)).astype(np.float32)
+    for mode in MemoryMode:
+        out, store = streaming.gemm_streamed(a, b, mode, cache_pages=4)
+        np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+    # DM streams everything; DC caches some; DevMem streams nothing
+    _, dm = streaming.gemm_streamed(a, b, MemoryMode.DM)
+    _, dc = streaming.gemm_streamed(a, b, MemoryMode.DC, cache_pages=64)
+    _, dv = streaming.gemm_streamed(a, b, MemoryMode.DEVMEM)
+    assert dm.stats.host_to_device_bytes >= dc.stats.host_to_device_bytes
+    assert dv.stats.host_to_device_bytes == 0

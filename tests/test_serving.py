@@ -1,0 +1,63 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.model import Model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import PagedCacheConfig, PagedKVCache
+
+
+def _requests(n, rng):
+    return [Request(uid=i,
+                    prompt=rng.integers(1, 250, size=int(rng.integers(4, 12))
+                                        ).astype(np.int32),
+                    max_new_tokens=5) for i in range(n)]
+
+
+def test_continuous_batching_matches_sequential():
+    """Greedy outputs must be independent of slot count / batching."""
+    cfg = get_reduced("qwen2_0_5b")
+    params = Model(cfg, remat="none").init(jax.random.PRNGKey(0))
+    outs = {}
+    for slots in (1, 3):
+        rng = np.random.default_rng(7)
+        eng = ServingEngine(cfg, params, slots=slots, max_seq=64)
+        reqs = _requests(5, rng)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        outs[slots] = [tuple(r.output) for r in reqs]
+    assert outs[1] == outs[3]
+
+
+def test_engine_throughput_and_latency_fields():
+    cfg = get_reduced("qwen1_5_32b")
+    params = Model(cfg, remat="none").init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    reqs = _requests(3, rng)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.tokens_out == sum(r.max_new_tokens for r in reqs)
+    assert all(r.first_token_s is not None and r.done_s is not None
+               for r in reqs)
+
+
+def test_paged_cache_alloc_free_invariants():
+    cfg = PagedCacheConfig(n_pages=16, page_tokens=8, n_kv_heads=2,
+                           head_dim=16, max_pages_per_seq=4)
+    cache = PagedKVCache(cfg, max_seqs=3)
+    assert cache.alloc_seq(0, prompt_len=20)     # 3 pages
+    k = jnp.ones((20, 2, 16))
+    cache.write_prompt(0, k, k)
+    assert cache.pages_in_use == 3
+    cache.append_token(np.array([0]), jnp.ones((1, 2, 16)),
+                       jnp.ones((1, 2, 16)))
+    assert int(cache.lens[0]) == 21
+    cache.free_seq(0)
+    assert cache.pages_in_use == 0
+    # exhaustion: can't allocate more pages than the pool holds
+    assert cache.alloc_seq(1, prompt_len=32)
+    assert not cache.alloc_seq(2, prompt_len=32 * 8)

@@ -1,0 +1,57 @@
+from repro.sharding.logical import make_rules, spec_for
+
+MS = {"data": 16, "model": 16}
+MS3 = {"pod": 2, "data": 16, "model": 16}
+
+
+def rules(**kw):
+    return make_rules(multi_pod=False, **kw)
+
+
+def test_weight_fsdp_plus_tp():
+    spec = spec_for(("embed", "mlp"), (4096, 16384), rules(), MS)
+    assert tuple(spec) == ("data", "model")
+
+
+def test_conflict_resolution_expert_wins_over_mlp():
+    spec = spec_for(("expert", "embed", "mlp"), (64, 512, 2048),
+                    rules(), MS)
+    assert tuple(spec) == ("model", "data", None)
+
+
+def test_non_divisible_replicates():
+    spec = spec_for(("embed", "heads", "head_dim"), (896, 14, 64),
+                    rules(), MS)
+    assert tuple(spec) == ("data", None, None)
+
+
+def test_kv_heads_fall_back_to_cache_seq():
+    # kv=2 cannot take model; cache_seq claims it instead
+    spec = spec_for(("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                    (128, 32768, 2, 64), rules(), MS)
+    assert tuple(spec) == ("data", "model", None, None)
+
+
+def test_long_context_shards_cache_seq_over_data():
+    r = make_rules(multi_pod=False, long_context=True)
+    spec = spec_for(("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                    (1, 524288, 32, 112), r, MS)
+    assert tuple(spec) == (None, "data", "model", None)
+
+
+def test_multi_pod_batch_takes_pod_and_data():
+    r = make_rules(multi_pod=True)
+    spec = spec_for(("batch", "seq"), (256, 4096), r, MS3)
+    assert tuple(spec) == (("pod", "data"), None)
+
+
+def test_seq_q_only_when_heads_cannot():
+    r = rules()
+    # heads divisible -> heads get model, seq_q drops
+    s1 = spec_for(("batch", "kv_heads", "heads", "seq_q", None),
+                  (16, 16, 1, 512, 64), r, MS)
+    assert tuple(s1)[1] == "model" and tuple(s1)[3] is None
+    # heads NOT divisible -> seq_q takes model
+    s2 = spec_for(("batch", "kv_heads", "heads", "seq_q", None),
+                  (16, 2, 7, 512, 64), r, MS)
+    assert tuple(s2)[3] == "model"
