@@ -2,6 +2,7 @@
 from repro.accesys import workloads as W
 from repro.accesys.system import (CPUModel, default_system,
                                   run_transformer_accel,
+                                  run_transformer_composed,
                                   run_transformer_cpu)
 from benchmarks.common import emit
 
@@ -20,6 +21,13 @@ def main():
     acc = run_transformer_accel(default_system("DC"), wl)
     for k, v in acc.breakdown().items():
         rows.append((f"matrixflow.{k}", round(acc.total_s * v * 1e6, 1),
+                     f"share={v:.3f}"))
+    # Fig.-2 latency buckets from the composed StreamPlan replay
+    # (descriptor / translation / transfer / compute / drain / host)
+    plan_r = run_transformer_composed(default_system("DC"),
+                                      "vit-base-16", n_layers=2)
+    for k, v in plan_r.buckets().items():
+        rows.append((f"plan2layer.{k}", round(plan_r.total_s * v * 1e6, 1),
                      f"share={v:.3f}"))
     emit(rows, "fig8_runtime_breakdown")
 

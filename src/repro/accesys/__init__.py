@@ -1,1 +1,2 @@
 from repro.accesys import components, pipeline, system, workloads  # noqa: F401
+from repro.accesys.pipeline import replay, simulate_gemm  # noqa: F401

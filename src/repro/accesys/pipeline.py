@@ -1,21 +1,32 @@
-"""Event-driven tile-pipeline simulator (paper Fig. 2 + Fig. 6).
+"""Event-driven StreamPlan replayer (paper Fig. 2 + Fig. 6).
 
-Replays the ``core.streaming`` schedule (Algorithm 1) against the
-component models: DMA-in(A), DMA-in(B), SA compute, DMA-out(C), with
-double buffering — transfers for step t+1 overlap compute of step t.
-Produces end-to-end latency plus the Fig.-2 latency buckets
+``replay`` times ANY ``core.plan.StreamPlan`` — single GEMMs, paged
+attention, or composed N-layer transformer models — against the
+component models: DMA-in on two read channels (lane 0 = A, lane 1 = B),
+SA compute with double buffering (transfers for step t+1 overlap compute
+of step t), host-side ops, and DMA-out draining behind the next tile's
+compute.  It produces end-to-end latency plus the Fig.-2 latency buckets
 (descriptor / translation / transfer / compute / drain) and TLB stats
 (Table 8).
+
+``simulate_gemm`` keeps its historical signature but is now a thin
+wrapper: build the (possibly steady-state-sampled) Algorithm-1 plan and
+replay it — the SAME plan ``core.streaming.gemm_streamed`` executes
+functionally.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 from repro.accesys.components import (DMAEngine, DRAM, LLC, PCIeLink,
-                                      SMMU, SystolicArray, DTYPE_BYTES)
+                                      SMMU, SystolicArray)
+from repro.core import plan as P
 from repro.core import streaming
+
+# behavioural host rate for plan-level host ops (softmax/LN/gelu):
+# matches system.CPUModel.nongemm_cycles_per_elem at 1 GHz
+HOST_S_PER_ELEM = 0.8e-9
 
 
 @dataclasses.dataclass
@@ -30,6 +41,8 @@ class GemmResult:
     tlb_misses: int
     ptw_walks: int
     macs: int
+    host_s: float = 0.0          # host-side op time (composed plans)
+    drain_s: float = 0.0         # DMA-out tail not hidden by compute
 
     @property
     def translation_overhead(self) -> float:
@@ -38,6 +51,20 @@ class GemmResult:
     @property
     def gops(self) -> float:
         return 2.0 * self.macs / max(self.total_s, 1e-30) / 1e9
+
+    def buckets(self) -> dict:
+        """Fig.-2 latency buckets, as shares of total."""
+        t = max(self.total_s, 1e-30)
+        return {"descriptor": self.descriptor_s / t,
+                "translation": self.translation_s / t,
+                "transfer": self.exposed_transfer_s / t,
+                "compute": self.compute_s / t,
+                "drain": self.drain_s / t,
+                "host": self.host_s / t}
+
+
+# keep the historical name but make the generality explicit
+ReplayResult = GemmResult
 
 
 @dataclasses.dataclass
@@ -69,81 +96,137 @@ class SystemConfig:
         return link + mem, trans
 
 
-def simulate_gemm(cfg: SystemConfig, M: int, N: int, K: int,
-                  dtype: Optional[str] = None,
-                  max_steps: int = 400_000) -> GemmResult:
-    """Event-driven replay of Algorithm 1. For very large problems the
-    inner loop is sampled and scaled (steady-state pipeline)."""
-    dtype = dtype or cfg.sa.dtype
-    elem = DTYPE_BYTES[dtype]
-    counts = streaming.tile_counts(M, N, K, f"int{8*elem}"
-                                   if dtype.startswith("int") else
-                                   {1: "int8", 2: "float16",
-                                    4: "float32"}[elem])
-    W, L = counts["w"], counts["l"]
-    page = cfg.page_bytes
-    footprint = counts["a_pages"] + counts["b_pages"] + \
-        counts["c_page_stores"]
-    cfg.smmu.reset()
-    cfg.llc.reset()
+@dataclasses.dataclass
+class _Trace:
+    """Raw replay timeline state + bucket accumulators (unscaled)."""
+    t_sa_free: float = 0.0
+    t_out_free: float = 0.0
+    compute_s: float = 0.0
+    transfer_s: float = 0.0
+    exposed_s: float = 0.0
+    desc_s: float = 0.0
+    trans_s: float = 0.0
+    host_s: float = 0.0
 
-    ops = streaming.schedule(M, N, K, {1: "int8", 2: "float16",
-                                       4: "float32"}[elem])
-    n_steps = counts["inner_steps"]
-    stride = max(1, n_steps // max_steps)
 
-    t_dma_free = 0.0       # input DMA channel availability
-    t_sa_free = 0.0
-    t_out_free = 0.0
-    compute_s = transfer_s = exposed_s = desc_s = trans_s = 0.0
-    simulated = 0
+def _replay_events(cfg: SystemConfig, events, footprint_pages: int,
+                   host_s_per_elem: float = HOST_S_PER_ELEM) -> _Trace:
+    """Walk the event list against the component models.
 
-    for op in ops:
-        # sampling: simulate every `stride`-th inner step, scale after
-        if ((op.i + op.j) * counts["k_steps"] + op.k) % stride \
-                and not op.last_k and not op.first_k:
-            continue
-        simulated += 1
-        # DMA-in A and B (two read channels run in parallel)
-        d = 2 * cfg.dma.descriptor_time() / cfg.dma.read_channels
-        ta, xa = cfg.path_time(page, ("a", op.a_page), footprint)
-        tb, xb = cfg.path_time(page, ("b", op.b_page), footprint)
-        tin = d + max(ta, tb) if cfg.dma.read_channels >= 2 \
-            else d + ta + tb
-        desc_s += d
-        trans_s += xa + xb
-        transfer_s += ta + tb
-        # double buffering: the fetch for this step ran during the
-        # previous step's compute
-        ready = max(t_dma_free, 0.0) + tin + xa + xb
+    Double buffering: a COMPUTE's input DMA group is charged against the
+    input-DMA channel timeline, so the fetch for step t+1 runs during
+    step t's compute; only the excess surfaces as exposed transfer.
+    DMA-out uses the write channels and drains behind compute.
+    """
+    tr = _Trace()
+    t_dma_free = 0.0
+    pending: list = []             # (lane, transfer_s, translation_s)
+
+    def drain_pending() -> float:
+        """Charge the queued DMA_IN group against the input-DMA
+        timeline; returns when its data is ready on-chip."""
+        nonlocal t_dma_free, pending
+        d = len(pending) * cfg.dma.descriptor_time() \
+            / cfg.dma.read_channels
+        tr.desc_s += d
+        lanes: dict = {}
+        for lane, t, _ in pending:
+            lanes[lane] = lanes.get(lane, 0.0) + t
+        if cfg.dma.read_channels >= len(lanes):
+            tin = d + max(lanes.values())
+        else:
+            tin = d + sum(t for _, t, _ in pending)
+        ready = max(t_dma_free, 0.0) + tin \
+            + sum(x for _, _, x in pending)
         t_dma_free = ready
-        start = max(ready, t_sa_free)
-        exposed_s += max(0.0, ready - t_sa_free)
-        # effective depth: the last K page may be partial
-        depth = min(L, K - op.k * L)
-        tile_compute = cfg.sa.tile_time(depth)
-        t_sa_free = start + tile_compute
-        compute_s += tile_compute
-        if op.last_k:
-            # DMA-out C overlaps the next tile's compute
-            tc, xc = cfg.path_time(W * W * elem, ("c", (op.i, op.j)),
-                                   footprint)
-            desc_s += cfg.dma.descriptor_time()
-            trans_s += xc
-            transfer_s += tc
-            t_out_free = max(t_out_free, t_sa_free) + tc
+        pending = []
+        return ready
 
-    scale = n_steps / max(simulated, 1)
-    total = max(t_sa_free, t_out_free) * scale \
-        + cfg.dma.doorbell_ns * 1e-9 + cfg.dma.interrupt_ns * 1e-9
+    for ev in events:
+        if ev.kind is P.EventKind.DMA_IN:
+            t, x = cfg.path_time(ev.nbytes, ev.page, footprint_pages)
+            pending.append((ev.lane, t, x))
+            tr.transfer_s += t
+            tr.trans_s += x
+        elif ev.kind is P.EventKind.COMPUTE and ev.unit == "sa":
+            ready = drain_pending() if pending else 0.0
+            start = max(ready, tr.t_sa_free)
+            tr.exposed_s += max(0.0, ready - tr.t_sa_free)
+            tile = cfg.sa.tile_time(ev.meta["depth"])
+            tr.t_sa_free = start + tile
+            tr.compute_s += tile
+        elif ev.kind is P.EventKind.COMPUTE:
+            # host op: waits for fetches in flight and for the producing
+            # C tiles to drain, then runs on the CPU while the
+            # accelerator idles (paper §4.2)
+            if pending:                  # pages fetched for host use
+                ready = drain_pending()
+                tr.exposed_s += max(0.0, ready - tr.t_sa_free)
+                tr.t_sa_free = max(tr.t_sa_free, ready)
+            th = ev.meta["elems"] * host_s_per_elem
+            tr.t_sa_free = max(tr.t_sa_free, tr.t_out_free) + th
+            tr.host_s += th
+        else:                       # DMA_OUT
+            tc, xc = cfg.path_time(ev.nbytes, ev.page, footprint_pages)
+            tr.desc_s += cfg.dma.descriptor_time()
+            tr.trans_s += xc
+            tr.transfer_s += tc
+            tr.t_out_free = max(tr.t_out_free, tr.t_sa_free) + tc
+    if pending:                     # trailing fetches no compute consumed
+        ready = drain_pending()
+        tr.exposed_s += max(0.0, ready - tr.t_sa_free)
+        tr.t_sa_free = max(tr.t_sa_free, ready)
+    return tr
+
+
+def _result(cfg: SystemConfig, tr: _Trace, macs: int, n_calls: int,
+            scale: float = 1.0) -> GemmResult:
+    control = n_calls * (cfg.dma.doorbell_ns + cfg.dma.interrupt_ns) * 1e-9
+    total = max(tr.t_sa_free, tr.t_out_free) * scale + control
     return GemmResult(
         total_s=total,
-        compute_s=compute_s * scale,
-        transfer_s=transfer_s * scale,
-        exposed_transfer_s=exposed_s * scale,
-        descriptor_s=desc_s * scale,
-        translation_s=trans_s * scale,
+        compute_s=tr.compute_s * scale,
+        transfer_s=tr.transfer_s * scale,
+        exposed_transfer_s=tr.exposed_s * scale,
+        descriptor_s=tr.desc_s * scale,
+        translation_s=tr.trans_s * scale,
         tlb_lookups=int(cfg.smmu.lookups * scale),
         tlb_misses=int(cfg.smmu.misses * scale),
         ptw_walks=int(cfg.smmu.walks * scale),
-        macs=counts["macs"])
+        macs=macs,
+        host_s=tr.host_s * scale,
+        drain_s=max(0.0, tr.t_out_free - tr.t_sa_free) * scale)
+
+
+def replay(cfg: SystemConfig, plan: P.StreamPlan,
+           host_s_per_elem: float = HOST_S_PER_ELEM,
+           reset: bool = True) -> GemmResult:
+    """Time an arbitrary StreamPlan end-to-end on this system config.
+
+    Works for single-op plans and for composed multi-layer transformer
+    plans (QKV / attention / FFN per layer); per-offloaded-call control
+    cost (doorbell + completion IRQ) is charged ``plan.n_calls`` times.
+    """
+    if reset:
+        cfg.smmu.reset()
+        cfg.llc.reset()
+    scale = plan.total_steps / max(plan.sampled_steps, 1) \
+        if plan.total_steps else 1.0
+    tr = _replay_events(cfg, plan.events, plan.footprint_pages,
+                        host_s_per_elem)
+    return _result(cfg, tr, plan.macs, plan.n_calls, scale)
+
+
+def simulate_gemm(cfg: SystemConfig, M: int, N: int, K: int,
+                  dtype: Optional[str] = None,
+                  max_steps: int = 400_000) -> GemmResult:
+    """Replay Algorithm 1 for one GEMM.  For very large problems the
+    plan is built steady-state-sampled and scaled."""
+    dtype = dtype or cfg.sa.dtype
+    np_name = P.np_dtype_for(dtype)
+    counts = streaming.tile_counts(M, N, K, np_name,
+                                   page_bytes=cfg.page_bytes)
+    stride = max(1, counts["inner_steps"] // max_steps)
+    plan = P.gemm_plan(M, N, K, np_name, page_bytes=cfg.page_bytes,
+                       sample_stride=stride)
+    return replay(cfg, plan)

@@ -18,7 +18,10 @@ from typing import Optional
 from repro.accesys import workloads as W
 from repro.accesys.components import (DMAEngine, DRAM, LLC, PCIeLink,
                                       SMMU, SystolicArray, DTYPE_BYTES)
-from repro.accesys.pipeline import GemmResult, SystemConfig, simulate_gemm
+from repro.accesys.pipeline import (GemmResult, SystemConfig, replay,
+                                    simulate_gemm)
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core import plan as plan_ir
 
 
 # --------------------------------------------------------------- CPUs
@@ -148,6 +151,32 @@ def run_transformer_cpu(wl: W.Workload, cpu: Optional[CPUModel] = None,
     total = gemm_s + nongemm_s
     return TransformerResult(wl.name, total, gemm_s, nongemm_s, 0.0,
                              by_class)
+
+
+# -------------------------------------------- composed StreamPlan path
+def model_stream_plan(name: str, n_layers: Optional[int] = None,
+                      dtype: str = "int8") -> "plan_ir.StreamPlan":
+    """The full event-graph plan for a paper model (BERT/ViT class):
+    N composed transformer-layer plans.  ``n_layers`` caps the stack
+    (the graph is exact, not sampled — BERT-Base at full depth is a few
+    hundred thousand events)."""
+    cfg = PAPER_MODELS[name]
+    layers = cfg.n_layers if n_layers is None else n_layers
+    return plan_ir.model_plan(cfg.max_train_seq, cfg.d_model,
+                              cfg.n_heads, cfg.d_ff, layers, dtype)
+
+
+def run_transformer_composed(cfg: SystemConfig, name: str,
+                             n_layers: Optional[int] = None,
+                             cpu: Optional[CPUModel] = None) -> GemmResult:
+    """End-to-end replay of a composed multi-layer transformer plan —
+    one event timeline across QKV / per-head attention / FFN instead of
+    per-GEMM-class aggregation.  Returns the Fig.-2 buckets for the
+    whole forward pass."""
+    cpu = cpu or CPUModel()
+    plan = model_stream_plan(name, n_layers, cfg.sa.dtype)
+    return replay(cfg, plan,
+                  host_s_per_elem=cpu.nongemm_cycles_per_elem / cpu.freq)
 
 
 # ----------------------------------------------------- config presets

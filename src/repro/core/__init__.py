@@ -1,1 +1,1 @@
-from repro.core import modes, overlap, paging, streaming  # noqa: F401
+from repro.core import modes, overlap, paging, plan, streaming  # noqa: F401

@@ -81,17 +81,25 @@ class PageStore:
                  cache_pages: int = 512):
         self.mode = mode
         self.stats = TrafficStats()
-        self._page_bytes = {k: int(v.size * v.dtype.itemsize)
-                            for k, v in pages.items()}
-        if mode is MemoryMode.DEVMEM:
-            self._resident = {k: device_placement(v)
-                              for k, v in pages.items()}
-            self._host = None
-        else:
-            self._host = {k: host_placement(v) for k, v in pages.items()}
-            self._resident = None
+        self._page_bytes: dict = {}
+        self._resident: dict = {} if mode is MemoryMode.DEVMEM else None
+        self._host: dict = None if mode is MemoryMode.DEVMEM else {}
         self._cache: "collections.OrderedDict" = collections.OrderedDict()
         self._cache_pages = cache_pages
+        self.add_pages(pages)
+
+    def add_pages(self, pages: dict) -> None:
+        """Register pages after construction — intermediates produced
+        mid-plan (an upstream op's DMA-out becomes a downstream operand)
+        land host-side in DM/DC and resident in DevMem."""
+        self._page_bytes.update({k: int(v.size * v.dtype.itemsize)
+                                 for k, v in pages.items()})
+        if self.mode is MemoryMode.DEVMEM:
+            self._resident.update({k: device_placement(v)
+                                   for k, v in pages.items()})
+        else:
+            self._host.update({k: host_placement(v)
+                               for k, v in pages.items()})
 
     def get(self, page_id):
         self.stats.lookups += 1

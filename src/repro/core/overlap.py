@@ -94,12 +94,36 @@ def tpu_block_overlap(bm: int, bn: int, bk: int, elem_bytes: int,
     return OverlapPoint(bw_req, compute, transfer, transfer <= compute)
 
 
-def choose_gemm_blocks(M: int, N: int, K: int, elem_bytes: int,
+def choose_gemm_blocks(M: int, N: int, K: int, dtype,
                        peak_flops: float = 197e12, hbm_bw: float = 819e9,
-                       vmem_budget: int = 8 * 1024 * 1024):
-    """Pick (bm, bn, bk): smallest VMEM working set that is still
-    compute-bound by the TPU overlap bound — the paper's thesis
-    ('small buffers + streaming suffice once the bound is met')."""
+                       vmem_budget: int = 8 * 1024 * 1024,
+                       page_bytes: int = 4096):
+    """THE Pallas block chooser (the former ``paging.page_aligned_blocks``
+    and the overlap-bound chooser, collapsed into one).
+
+    Picks (bm, bn, bk) that are (a) page-aligned — every HBM->VMEM copy
+    is a whole number of 4 KB pages, one descriptor per tile, (b)
+    MXU-aligned (candidates are 128..2048 powers of two), (c) within
+    the VMEM budget (A tile + B tile + fp32 C accumulator), and (d) the
+    *smallest* such working set that is still compute-bound by the TPU
+    overlap bound (Eq. 1 re-derived) — the paper's thesis: small
+    buffers + streaming suffice once the bound is met.  If no candidate
+    meets the bound (bandwidth-starved link) it falls back to the
+    largest-reuse block that fits, greedily grown K-first to amortize
+    the C flush.
+
+    ``dtype`` may be a numpy/jax dtype or an element byte count.
+    """
+    from repro.core import paging
+    s = dtype if isinstance(dtype, int) else paging.dtype_bytes(dtype)
+
+    def fit(bm, bn, bk):
+        return (bm * bk + bk * bn) * s + bm * bn * 4 <= vmem_budget
+
+    def page_ok(bm, bn, bk):
+        return (bm * bk * s) % page_bytes == 0 and \
+            (bk * bn * s) % page_bytes == 0
+
     best = None
     cand_sizes = [128, 256, 512, 1024, 2048]
     for bm in cand_sizes:
@@ -107,16 +131,31 @@ def choose_gemm_blocks(M: int, N: int, K: int, elem_bytes: int,
             for bk in cand_sizes:
                 if bm > max(M, 128) or bn > max(N, 128) or bk > max(K, 128):
                     continue
-                vmem = (bm * bk + bk * bn) * elem_bytes + bm * bn * 4
-                if vmem > vmem_budget:
+                if not fit(bm, bn, bk) or not page_ok(bm, bn, bk):
                     continue
-                pt = tpu_block_overlap(bm, bn, bk, elem_bytes,
-                                       peak_flops, hbm_bw)
+                pt = tpu_block_overlap(bm, bn, bk, s, peak_flops, hbm_bw)
                 if not pt.feasible:
                     continue
+                vmem = (bm * bk + bk * bn) * s + bm * bn * 4
                 key = (vmem, -bk)          # smallest working set, deep K
                 if best is None or key < best[0]:
                     best = (key, (bm, bn, bk))
-    if best is None:                        # bandwidth-starved: max reuse
-        return 512, 512, min(2048, max(K, 128))
-    return best[1]
+    if best is not None:
+        return best[1]
+    # bandwidth-starved: maximize reuse instead — greedy doubling from
+    # the MXU floor, K first (depth amortizes the C flush)
+    bm = bn = bk = 128
+    for _ in range(64):
+        grew = False
+        for dim in ("bk", "bm", "bn"):
+            cand = dict(bm=bm, bn=bn, bk=bk)
+            cand[dim] *= 2
+            if cand["bm"] <= max(M, 128) and cand["bn"] <= max(N, 128) \
+                    and cand["bk"] <= max(K, 128) and fit(**cand) \
+                    and page_ok(**cand):
+                bm, bn, bk = cand["bm"], cand["bn"], cand["bk"]
+                grew = True
+        if not grew:
+            break
+    assert page_ok(bm, bn, bk), (bm, bn, bk, s)
+    return bm, bn, bk

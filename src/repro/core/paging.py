@@ -110,33 +110,6 @@ def unpack_pages(pages, layout: PageLayout):
     return x[:layout.rows, :layout.cols]
 
 
-def page_aligned_blocks(M: int, N: int, K: int, dtype,
-                        vmem_budget: int = 8 * 1024 * 1024,
-                        page_bytes: int = PAGE_BYTES):
-    """Pallas block sizes (bm, bn, bk) that are (a) page-multiples, so
-    each HBM→VMEM copy is a whole number of 4 KB pages, (b) MXU-aligned
-    (last dim ×128, second-to-last ×8), and (c) fit the VMEM budget
-    (A tile + B tile + fp32 C accumulator ≤ budget)."""
-    s = dtype_bytes(dtype)
-
-    def fit(bm, bn, bk):
-        return (bm * bk + bk * bn) * s + bm * bn * 4 <= vmem_budget
-
-    bm = bn = bk = 128
-    # grow greedily, biggest win first: K depth amortizes the C flush
-    for _ in range(64):
-        grew = False
-        for dim in ("bk", "bm", "bn"):
-            cand = dict(bm=bm, bn=bn, bk=bk)
-            cand[dim] *= 2
-            if cand["bm"] <= max(M, 128) and cand["bn"] <= max(N, 128) \
-                    and cand["bk"] <= max(K, 128) and fit(**cand):
-                bm, bn, bk = cand["bm"], cand["bn"], cand["bk"]
-                grew = True
-        if not grew:
-            break
-    # page alignment: every block row count is a multiple of 8 and the
-    # tile byte sizes are page multiples by construction (128·s·8 ≥ 1 KB;
-    # bm·bk·s here is ≥ 128·128·1 = 16 KiB = 4 pages)
-    assert (bm * bk * s) % page_bytes == 0 and (bk * bn * s) % page_bytes == 0
-    return bm, bn, bk
+# NOTE: the Pallas block chooser lives in ``core.overlap``
+# (``choose_gemm_blocks``) — page alignment and the overlap bound are
+# one decision, so there is exactly one chooser.

@@ -1,0 +1,422 @@
+"""StreamPlan — the event-graph IR unifying streaming (paper Figs. 2/6).
+
+One typed event graph of ``DMA_IN`` / ``COMPUTE`` / ``DMA_OUT`` events —
+carrying page ids, byte counts, dependency edges and double-buffer lane
+assignments — is the single source of truth for the paper's Algorithm-1
+loop nest.  Two consumers share it:
+
+  * ``core.streaming.execute_plan`` — the *functional* executor: runs the
+    plan tile-by-tile through a mode-aware ``PageStore`` (DM / DC /
+    DevMem) and returns numerical results plus metered traffic;
+  * ``accesys.pipeline.replay`` — the *timing* replayer: replays the same
+    events against the PCIe/DRAM/SMMU/LLC component models and returns
+    the Fig.-2 latency buckets.
+
+Builders cover the paper's GEMM (Algorithm 1), paged attention
+(QK^T -> softmax -> PV streaming over KV pages), and full transformer
+layers / N-layer models composed from per-op plans — which is what lets
+the accesys simulator produce end-to-end BERT/ViT-class numbers instead
+of per-GEMM ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator, Mapping, Optional, Sequence
+
+from repro.core import paging
+
+# accesys dtype names <-> element sizes; tile geometry depends only on
+# the element size, so each size maps onto one canonical numpy dtype.
+ELEM_BYTES = {"int8": 1, "int16": 2, "int32": 4,
+              "fp8": 1, "fp16": 2, "fp32": 4}
+_NP_FOR_ELEM = {1: "int8", 2: "float16", 4: "float32"}
+
+
+def np_dtype_for(dtype) -> str:
+    """Canonical numpy dtype name for an accesys or numpy dtype."""
+    if isinstance(dtype, str) and dtype in ELEM_BYTES:
+        return _NP_FOR_ELEM[ELEM_BYTES[dtype]]
+    return _NP_FOR_ELEM[paging.dtype_bytes(dtype)]
+
+
+def elem_bytes_for(dtype) -> int:
+    if isinstance(dtype, str) and dtype in ELEM_BYTES:
+        return ELEM_BYTES[dtype]
+    return paging.dtype_bytes(dtype)
+
+
+class EventKind(enum.Enum):
+    DMA_IN = "DMA_IN"
+    COMPUTE = "COMPUTE"
+    DMA_OUT = "DMA_OUT"
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One node of the stream graph.
+
+    ``page`` is a ``(tensor_name, page_id)`` key — the same key the
+    PageStore, SMMU TLB and LLC see, so functional and timing runs touch
+    identical page streams.  ``lane`` is the DMA-channel / double-buffer
+    lane (A-operand lane 0, B-operand lane 1; ``meta["buf"]`` carries the
+    ping-pong buffer index).  ``deps`` are eids that must complete first
+    (data edges; resource serialization is the replayer's job).
+    """
+    eid: int
+    kind: EventKind
+    nbytes: int = 0
+    page: Optional[tuple] = None
+    deps: tuple = ()
+    lane: int = 0
+    op: str = ""
+    unit: str = "sa"              # COMPUTE: "sa" (accelerator) | "host"
+    meta: Mapping = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class TensorSpec:
+    rows: int
+    cols: int
+    roles: set                     # subset of {"A", "B", "C"}
+    kind: str = "input"            # input | weight | intermediate | output
+
+
+@dataclasses.dataclass
+class StreamPlan:
+    """A topologically-ordered event list plus its tensor registry."""
+    name: str
+    dtype: str                     # canonical numpy dtype name
+    page_bytes: int
+    events: list
+    tensors: dict                  # name -> TensorSpec
+    macs: int = 0
+    n_calls: int = 0               # offloaded launches (doorbell+IRQ each)
+    total_steps: int = 0           # inner steps the plan logically covers
+    sampled_steps: int = 0         # steps materialized (== total unless sampled)
+
+    # ------------------------------------------------------------ info
+    @property
+    def footprint_pages(self) -> int:
+        """Pages the SMMU can see: per tensor, one page set per role
+        (a tensor produced as C tiles and re-consumed as an A operand
+        occupies both page namespaces, exactly as the replayer keys them).
+        """
+        total = 0
+        for spec in self.tensors.values():
+            for role in spec.roles:
+                total += self._role_pages(spec, role)
+        return total
+
+    def _role_pages(self, spec: TensorSpec, role: str) -> int:
+        if role == "C":
+            w = paging.SA_DIM
+            return (-(-spec.rows // w)) * (-(-spec.cols // w))
+        lay = paging.layout_for((spec.rows, spec.cols), self.dtype, role,
+                                self.page_bytes)
+        return lay.n_pages
+
+    def counts(self) -> dict:
+        """Event statistics (page loads per tensor, computes, stores)."""
+        loads: dict = {}
+        stores: dict = {}
+        sa = host = 0
+        for ev in self.events:
+            if ev.kind is EventKind.DMA_IN:
+                loads[ev.page[0]] = loads.get(ev.page[0], 0) + 1
+            elif ev.kind is EventKind.DMA_OUT:
+                stores[ev.page[0]] = stores.get(ev.page[0], 0) + 1
+            elif ev.unit == "sa":
+                sa += 1
+            else:
+                host += 1
+        return {"dma_in": loads, "dma_out": stores,
+                "sa_computes": sa, "host_computes": host,
+                "n_events": len(self.events)}
+
+    def validate(self) -> None:
+        """Events must be topologically ordered with in-plan deps."""
+        seen: set = set()
+        for ev in self.events:
+            assert ev.eid not in seen, f"duplicate eid {ev.eid}"
+            for d in ev.deps:
+                assert d in seen, f"event {ev.eid} depends on unseen {d}"
+            seen.add(ev.eid)
+
+
+# --------------------------------------------------------------- compose
+def concat(plans: Sequence[StreamPlan], name: str = "composed",
+           barrier: bool = True) -> StreamPlan:
+    """Sequential composition: renumber eids, merge tensor registries,
+    and (with ``barrier``) add a dependency edge from each sub-plan's
+    last event to the next sub-plan's first — activations produced by
+    op N feed op N+1."""
+    if not plans:
+        raise ValueError("concat() needs at least one sub-plan")
+    events: list = []
+    tensors: dict = {}
+    macs = n_calls = total = sampled = 0
+    offset = 0
+    prev_last: Optional[int] = None
+    dtype = plans[0].dtype
+    page_bytes = plans[0].page_bytes
+    for p in plans:
+        assert p.dtype == dtype and p.page_bytes == page_bytes, \
+            (p.name, p.dtype, p.page_bytes)
+        for name_, spec in p.tensors.items():
+            if name_ in tensors:
+                t = tensors[name_]
+                assert (t.rows, t.cols) == (spec.rows, spec.cols), \
+                    f"tensor {name_} redeclared with a different shape"
+                t.roles |= spec.roles
+                if spec.kind != "input":
+                    t.kind = spec.kind
+            else:
+                tensors[name_] = TensorSpec(spec.rows, spec.cols,
+                                            set(spec.roles), spec.kind)
+        for idx, ev in enumerate(p.events):
+            deps = tuple(d + offset for d in ev.deps)
+            if barrier and idx == 0 and prev_last is not None:
+                deps = (prev_last,) + deps
+            events.append(dataclasses.replace(
+                ev, eid=ev.eid + offset, deps=deps))
+        if p.events:
+            prev_last = events[-1].eid
+            offset = events[-1].eid + 1
+        macs += p.macs
+        n_calls += p.n_calls
+        total += p.total_steps
+        sampled += p.sampled_steps
+    return StreamPlan(name, dtype, page_bytes, events, tensors,
+                      macs=macs, n_calls=n_calls,
+                      total_steps=total, sampled_steps=sampled)
+
+
+# ------------------------------------------------------------- Algorithm 1
+@dataclasses.dataclass(frozen=True)
+class TileStep:
+    """One inner-loop step of Algorithm 1 (i, j output tile; k depth)."""
+    i: int
+    j: int
+    k: int
+    a_page: int
+    b_page: int
+    first_k: bool
+    last_k: bool
+    depth: int                     # effective K depth (last page may be partial)
+
+
+def gemm_tile_steps(M: int, N: int, K: int, dtype,
+                    page_bytes: int = paging.PAGE_BYTES,
+                    order: str = "jik") -> Iterator[TileStep]:
+    """The paper's loop nest — THE single source of the loop order.
+    Default ``jik`` keeps the current B column (K/L pages) hot in the LLC
+    across the i-sweep (§3.3 'blocking improves cache utilization');
+    ``ijk`` is the naive un-co-designed baseline."""
+    la = paging.layout_for((M, K), np_dtype_for(dtype), "A", page_bytes)
+    lb = paging.layout_for((K, N), np_dtype_for(dtype), "B", page_bytes)
+    W, L = la.tile_r, la.tile_c
+    ni, nj, kk = -(-M // W), -(-N // W), -(-K // L)
+    outer, inner = (range(nj), range(ni)) if order == "jik" \
+        else (range(ni), range(nj))
+    for o in outer:
+        for p in inner:
+            i, j = (p, o) if order == "jik" else (o, p)
+            for k in range(kk):
+                yield TileStep(
+                    i, j, k,
+                    a_page=la.page_of(i * W, k * L),
+                    b_page=lb.page_of(k * L, j * W),
+                    first_k=(k == 0), last_k=(k == kk - 1),
+                    depth=min(L, K - k * L))
+
+
+def gemm_plan(M: int, N: int, K: int, dtype, *,
+              a: str = "a", b: str = "b", c: str = "c",
+              order: str = "jik",
+              page_bytes: int = paging.PAGE_BYTES,
+              sample_stride: int = 1,
+              a_kind: str = "input", b_kind: str = "input",
+              c_kind: str = "output",
+              name: Optional[str] = None) -> StreamPlan:
+    """Algorithm-1 GEMM as an event graph: per inner step, DMA-in one A
+    page (lane 0) and one B page (lane 1), one W×W×depth compute
+    depending on both (and on the previous k step of the same output
+    tile — the output-stationary accumulator chain), and after the last
+    k a DMA-out of the W×W C tile.
+
+    ``sample_stride > 1`` materializes only every stride-th steady-state
+    step (first/last k always kept) for very large problems; the
+    replayer scales by ``total_steps / sampled_steps``.
+    """
+    np_dt = np_dtype_for(dtype)
+    elem = paging.dtype_bytes(np_dt)
+    la = paging.layout_for((M, K), np_dt, "A", page_bytes)
+    W = la.tile_r
+    kk = -(-K // la.tile_c)
+    events: list = []
+    eid = 0
+    chain = -1                     # previous compute eid of this (i, j)
+    sampled = 0
+    for st in gemm_tile_steps(M, N, K, np_dt, page_bytes, order):
+        if sample_stride > 1 and ((st.i + st.j) * kk + st.k) \
+                % sample_stride and not st.last_k and not st.first_k:
+            continue
+        sampled += 1
+        ea = Event(eid, EventKind.DMA_IN, nbytes=page_bytes,
+                   page=(a, st.a_page), lane=0, op="load",
+                   meta={"buf": st.k & 1})
+        eb = Event(eid + 1, EventKind.DMA_IN, nbytes=page_bytes,
+                   page=(b, st.b_page), lane=1, op="load",
+                   meta={"buf": st.k & 1})
+        deps = (ea.eid, eb.eid) if st.first_k \
+            else (ea.eid, eb.eid, chain)
+        ec = Event(eid + 2, EventKind.COMPUTE, deps=deps, op="gemm",
+                   unit="sa",
+                   meta={"i": st.i, "j": st.j, "k": st.k,
+                         "depth": st.depth, "first_k": st.first_k,
+                         "last_k": st.last_k, "w": W,
+                         "a": a, "b": b, "c": c,
+                         "a_page": st.a_page, "b_page": st.b_page})
+        events += [ea, eb, ec]
+        chain = ec.eid
+        eid += 3
+        if st.last_k:
+            events.append(Event(eid, EventKind.DMA_OUT,
+                                nbytes=W * W * elem,
+                                page=(c, (st.i, st.j)),
+                                deps=(ec.eid,), op="store"))
+            eid += 1
+    ni, nj = -(-M // W), -(-N // W)
+    tensors = {a: TensorSpec(M, K, {"A"}, a_kind),
+               b: TensorSpec(K, N, {"B"}, b_kind),
+               c: TensorSpec(M, N, {"C"}, c_kind)}
+    return StreamPlan(name or f"gemm{M}x{N}x{K}", np_dt, page_bytes,
+                      events, tensors, macs=M * N * K, n_calls=1,
+                      total_steps=ni * nj * kk, sampled_steps=sampled)
+
+
+# ------------------------------------------------------------- host ops
+def host_plan(op: str, inputs: Sequence[str], output: Optional[str],
+              out_shape: Optional[tuple], elems: int, dtype,
+              page_bytes: int = paging.PAGE_BYTES,
+              meta: Optional[dict] = None,
+              out_kind: str = "intermediate") -> StreamPlan:
+    """A single host-side COMPUTE event (softmax / layernorm / gelu /
+    slice / concat / add / transpose — the paper keeps these on the CPU,
+    §4.2).  ``elems`` sizes the replayer's host-time model."""
+    m = {"inputs": tuple(inputs), "out": output, "elems": elems}
+    m.update(meta or {})
+    ev = Event(0, EventKind.COMPUTE, op=op, unit="host", meta=m)
+    tensors = {}
+    if output is not None and out_shape is not None:
+        tensors[output] = TensorSpec(out_shape[0], out_shape[1], set(),
+                                     out_kind)
+    return StreamPlan(f"host.{op}", np_dtype_for(dtype), page_bytes,
+                      [ev], tensors)
+
+
+# ----------------------------------------------------------- attention
+def attention_plan(S: int, d_head: int, dtype, *,
+                   q: str = "q", kT: str = "kT", v: str = "v",
+                   out: str = "attn", prefix: str = "",
+                   page_bytes: int = paging.PAGE_BYTES) -> StreamPlan:
+    """Paged attention for one head: QK^T streamed over K pages, host
+    softmax, then PV streamed over V pages (paper §4.2: MHA GEMMs on the
+    accelerator, softmax on the host)."""
+    scores, p = prefix + "scores", prefix + "p"
+    return concat([
+        gemm_plan(S, S, d_head, dtype, a=q, b=kT, c=scores,
+                  c_kind="intermediate", page_bytes=page_bytes),
+        host_plan("softmax", (scores,), p, (S, S), S * S, dtype,
+                  page_bytes),
+        gemm_plan(S, d_head, S, dtype, a=p, b=v, c=out,
+                  c_kind="intermediate", page_bytes=page_bytes),
+    ], name=f"attention{S}x{d_head}")
+
+
+# ----------------------------------------------- transformer layer / model
+def transformer_layer_plan(S: int, d_model: int, n_heads: int, d_ff: int,
+                           dtype, *, x: str = "x", layer: int = 0,
+                           out: Optional[str] = None,
+                           page_bytes: int = paging.PAGE_BYTES
+                           ) -> StreamPlan:
+    """One post-LN encoder layer (BERT/ViT-class) as a composed plan:
+    QKV projection -> per-head paged attention -> output projection ->
+    residual+LN -> FFN (FF1, gelu, FF2) -> residual+LN.  GEMMs stream
+    through the accelerator; everything else is host work."""
+    P = f"L{layer}."
+    hd = d_model // n_heads
+    dt = dtype
+    plans = [gemm_plan(S, 3 * d_model, d_model, dt, a=x, b=P + "wqkv",
+                       c=P + "qkv", b_kind="weight",
+                       c_kind="intermediate", page_bytes=page_bytes)]
+    head_outs = []
+    for h in range(n_heads):
+        qh, kh, vh = P + f"q{h}", P + f"kT{h}", P + f"v{h}"
+        oh = P + f"o{h}"
+        plans += [
+            host_plan("slice_cols", (P + "qkv",), qh, (S, hd), S * hd, dt,
+                      page_bytes, {"start": h * hd, "stop": (h + 1) * hd}),
+            host_plan("slice_cols", (P + "qkv",), kh, (hd, S), S * hd, dt,
+                      page_bytes, {"start": d_model + h * hd,
+                                   "stop": d_model + (h + 1) * hd,
+                                   "transpose": True}),
+            host_plan("slice_cols", (P + "qkv",), vh, (S, hd), S * hd, dt,
+                      page_bytes, {"start": 2 * d_model + h * hd,
+                                   "stop": 2 * d_model + (h + 1) * hd}),
+            attention_plan(S, hd, dt, q=qh, kT=kh, v=vh, out=oh,
+                           prefix=P + f"h{h}.", page_bytes=page_bytes),
+        ]
+        head_outs.append(oh)
+    out = out or P + "out"
+    plans += [
+        host_plan("concat_cols", tuple(head_outs), P + "attn",
+                  (S, d_model), S * d_model, dt, page_bytes),
+        gemm_plan(S, d_model, d_model, dt, a=P + "attn", b=P + "wo",
+                  c=P + "proj", b_kind="weight", c_kind="intermediate",
+                  page_bytes=page_bytes),
+        host_plan("add", (x, P + "proj"), P + "res1", (S, d_model),
+                  S * d_model, dt, page_bytes),
+        host_plan("layernorm", (P + "res1",), P + "ln1", (S, d_model),
+                  2 * S * d_model, dt, page_bytes),
+        gemm_plan(S, d_ff, d_model, dt, a=P + "ln1", b=P + "w1",
+                  c=P + "ff1", b_kind="weight", c_kind="intermediate",
+                  page_bytes=page_bytes),
+        host_plan("gelu", (P + "ff1",), P + "g", (S, d_ff), S * d_ff, dt,
+                  page_bytes),
+        gemm_plan(S, d_model, d_ff, dt, a=P + "g", b=P + "w2",
+                  c=P + "ff2", b_kind="weight", c_kind="intermediate",
+                  page_bytes=page_bytes),
+        host_plan("add", (P + "ln1", P + "ff2"), P + "res2", (S, d_model),
+                  S * d_model, dt, page_bytes),
+        host_plan("layernorm", (P + "res2",), out, (S, d_model),
+                  2 * S * d_model, dt, page_bytes,
+                  out_kind="output"),
+    ]
+    return concat(plans, name=f"layer{layer}")
+
+
+def model_plan(S: int, d_model: int, n_heads: int, d_ff: int,
+               n_layers: int, dtype, *, x: str = "x",
+               page_bytes: int = paging.PAGE_BYTES) -> StreamPlan:
+    """N stacked encoder layers; layer i's output tensor feeds layer
+    i+1.  This is the plan the accesys replayer times end-to-end."""
+    plans = []
+    inp = x
+    for i in range(n_layers):
+        plans.append(transformer_layer_plan(
+            S, d_model, n_heads, d_ff, dtype, x=inp, layer=i,
+            page_bytes=page_bytes))
+        inp = f"L{i}.out"
+    return concat(plans, name=f"transformer{n_layers}x{d_model}")
+
+
+def layer_weights(d_model: int, d_ff: int, layer: int = 0) -> dict:
+    """Shapes of the weight tensors one layer plan expects — handy for
+    building executor inputs."""
+    P = f"L{layer}."
+    return {P + "wqkv": (d_model, 3 * d_model),
+            P + "wo": (d_model, d_model),
+            P + "w1": (d_model, d_ff),
+            P + "w2": (d_ff, d_model)}

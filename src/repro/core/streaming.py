@@ -1,25 +1,28 @@
-"""Streaming GEMM orchestration (Algorithm 1 + Fig. 6).
+"""Functional StreamPlan execution (Algorithm 1 + Fig. 6).
 
-``BlockMatrixMultiply``: the paper's tile-by-tile GEMM over page-aligned
-tiles, expressed as a pipeline of (DMA-in A, DMA-in B, compute,
-DMA-out C) events. Two consumers:
-  * functional execution (via the Pallas kernel or jnp) for tests and
-    the offload examples — mode-aware through ``PageStore``;
-  * the event *schedule* itself, which accesys' pipeline simulator
-    replays against PCIe/DRAM/SMMU models to produce the paper's
-    latency numbers.
+``execute_plan`` is the mode-aware *executor* half of the co-design: it
+walks a ``core.plan.StreamPlan`` event graph — the same one the accesys
+timing replayer consumes — fetching pages through a ``PageStore`` (DM /
+DC / DevMem traffic semantics), running W×W×depth systolic tile GEMMs on
+``DMA_IN`` pages, host ops (softmax / layernorm / gelu / ...) on
+materialized tensors, and assembling ``DMA_OUT`` tiles into outputs.
+
+``gemm_streamed`` is now a thin wrapper: build the Algorithm-1 plan,
+execute it.  There is exactly one loop nest in the codebase
+(``plan.gemm_tile_steps``); ``schedule()`` remains as the generator view
+of it for compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import paging
+from repro.core import plan as P
 from repro.core.modes import MemoryMode, PageStore
 
 
@@ -38,65 +41,138 @@ class TileOp:
 def schedule(M: int, N: int, K: int, dtype,
              page_bytes: int = paging.PAGE_BYTES,
              order: str = "jik") -> Iterator[TileOp]:
-    """Yield the paper's loop nest (Algorithm 1) with a cache-aware loop
-    order (§3.3 'blocking improves cache utilization'): the default
-    ``jik`` keeps the current B column (K/L pages) hot in the LLC across
-    the i-sweep while the A operand (usually activations, small) stays
-    LLC-resident — so in DC mode each page crosses the link ~once.
-    ``ijk`` is the naive order (used as the un-co-designed baseline)."""
-    la = paging.layout_for((M, K), dtype, "A", page_bytes)
-    lb = paging.layout_for((K, N), dtype, "B", page_bytes)
-    W = la.tile_r
-    L = la.tile_c
-    ni, nj, kk = -(-M // W), -(-N // W), -(-K // L)
-    outer, inner = (range(nj), range(ni)) if order == "jik" \
-        else (range(ni), range(nj))
-    for o in outer:
-        for p in inner:
-            i, j = (p, o) if order == "jik" else (o, p)
-            for k in range(kk):
-                yield TileOp(
-                    i, j, k,
-                    a_page=la.page_of(i * W, k * L),
-                    b_page=lb.page_of(k * L, j * W),
-                    first_k=(k == 0), last_k=(k == kk - 1))
+    """Compatibility view of ``plan.gemm_tile_steps`` — the single
+    source of the paper's loop nest and its cache-aware ``jik`` order."""
+    for st in P.gemm_tile_steps(M, N, K, dtype, page_bytes, order):
+        yield TileOp(st.i, st.j, st.k, st.a_page, st.b_page,
+                     st.first_k, st.last_k)
+
+
+# ------------------------------------------------------------- host ops
+def _slice_cols(x, meta):
+    out = x[:, meta["start"]:meta["stop"]]
+    return out.T if meta.get("transpose") else out
+
+
+_HOST_OPS = {
+    "softmax": lambda xs, m: np.asarray(jax.nn.softmax(
+        jnp.asarray(xs[0], jnp.float32), axis=-1)),
+    "gelu": lambda xs, m: np.asarray(jax.nn.gelu(
+        jnp.asarray(xs[0], jnp.float32))),
+    "layernorm": lambda xs, m: np.asarray(_layernorm(xs[0])),
+    "add": lambda xs, m: xs[0] + xs[1],
+    "slice_cols": lambda xs, m: _slice_cols(xs[0], m),
+    "concat_cols": lambda xs, m: np.concatenate(xs, axis=1),
+    "transpose": lambda xs, m: xs[0].T,
+}
+
+
+def _layernorm(x, eps: float = 1e-5):
+    x = np.asarray(x, np.float64)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + eps)
+
+
+# -------------------------------------------------------------- executor
+def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
+                 cache_pages: int = 512):
+    """Run a StreamPlan numerically through a mode-aware PageStore.
+
+    ``tensors`` maps input/weight tensor names to host arrays; returns
+    ``(outputs, store)`` where ``outputs`` maps every produced tensor
+    name to its materialized array and the store's TrafficStats carry
+    the measured host<->device traffic per mode.
+    """
+    np_dt = np.dtype(plan.dtype)
+    acc_dtype = jnp.int32 if np.issubdtype(np_dt, np.integer) \
+        else jnp.float32
+    store = PageStore({}, mode, cache_pages=cache_pages)
+    packed: set = set()
+    layouts: dict = {}
+    mats: dict = dict(tensors)     # materialized full tensors (host side)
+    out_bufs: dict = {}            # C-tile assembly buffers (padded)
+    acc: dict = {}                 # (c, i, j) -> on-device accumulator
+    buf: dict = {}                 # fetched pages awaiting their compute
+    produced: set = set()
+
+    def ensure_packed(name: str) -> None:
+        if name in packed:
+            return
+        spec = plan.tensors[name]
+        if {"A", "B"} <= spec.roles:
+            # page ids for A (row-major) and B (row-striped) layouts
+            # index different page grids; one physical page set cannot
+            # serve both.  Builders avoid this by materializing a copy
+            # under a second name (e.g. via a "transpose" host op).
+            raise NotImplementedError(
+                f"tensor {name!r} is consumed as both an A and a B "
+                "operand; give the B-side consumer its own tensor name")
+        role = "A" if "A" in spec.roles else "B"
+        lay = paging.layout_for((spec.rows, spec.cols), np_dt, role,
+                                plan.page_bytes)
+        arr = np.asarray(materialize(name)).astype(np_dt)
+        pages = paging.pack_pages(jnp.asarray(arr), lay)
+        store.add_pages({(name, int(i)): pages[i]
+                         for i in range(lay.n_pages)})
+        layouts[name] = lay
+        packed.add(name)
+
+    def materialize(name: str):
+        if name not in mats:
+            spec = plan.tensors[name]
+            mats[name] = out_bufs.pop(name)[:spec.rows, :spec.cols]
+        return mats[name]
+
+    for ev in plan.events:
+        if ev.kind is P.EventKind.DMA_IN:
+            ensure_packed(ev.page[0])
+            buf[ev.page] = store.get(ev.page)
+        elif ev.kind is P.EventKind.COMPUTE and ev.unit == "sa":
+            m = ev.meta
+            at = buf.pop((m["a"], m["a_page"]))
+            bt = buf.pop((m["b"], m["b_page"]))
+            key = (m["c"], m["i"], m["j"])
+            part = jnp.dot(at, bt, preferred_element_type=acc_dtype)
+            acc[key] = part if m["first_k"] else acc[key] + part
+        elif ev.kind is P.EventKind.COMPUTE:
+            m = ev.meta
+            ins = [np.asarray(materialize(n)) for n in m["inputs"]]
+            mats[m["out"]] = np.asarray(_HOST_OPS[ev.op](ins, m))
+            produced.add(m["out"])
+        else:                       # DMA_OUT: drain one W×W C tile
+            name, (i, j) = ev.page
+            spec = plan.tensors[name]
+            w = paging.SA_DIM
+            if name not in out_bufs:
+                gr, gc = -(-spec.rows // w), -(-spec.cols // w)
+                out_bufs[name] = np.zeros((gr * w, gc * w), np.float64)
+            tile = np.asarray(acc.pop((name, i, j)))
+            out_bufs[name][i * w:(i + 1) * w, j * w:(j + 1) * w] = tile
+            produced.add(name)
+    outputs = {n: np.asarray(materialize(n)) for n in produced}
+    return outputs, store
 
 
 def gemm_streamed(a: np.ndarray, b: np.ndarray, mode: MemoryMode,
                   page_bytes: int = paging.PAGE_BYTES,
-                  cache_pages: int = 512):
-    """Run Algorithm 1 tile-by-tile through a mode-aware PageStore.
+                  cache_pages: int = 512,
+                  order: str = "jik"):
+    """Run Algorithm 1 tile-by-tile through a mode-aware PageStore, by
+    executing the same ``StreamPlan`` the accesys simulator replays
+    (cache-aware ``jik`` order included).
 
     Returns (result, PageStore) — the store's TrafficStats carry the
-    measured host↔device traffic and cache behaviour per mode.
+    measured host<->device traffic and cache behaviour per mode.
     """
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
-    la = paging.layout_for((M, K), a.dtype, "A", page_bytes)
-    lb = paging.layout_for((K, N), b.dtype, "B", page_bytes)
-    a_pages = paging.pack_pages(jnp.asarray(a), la)
-    b_pages = paging.pack_pages(jnp.asarray(b), lb)
-    store = PageStore(
-        {("a", int(i)): a_pages[i] for i in range(la.n_pages)} |
-        {("b", int(i)): b_pages[i] for i in range(lb.n_pages)},
-        mode, cache_pages=cache_pages)
-
-    W, L = la.tile_r, la.tile_c
-    acc_dtype = jnp.int32 if jnp.issubdtype(a_pages.dtype, jnp.integer) \
-        else jnp.float32
-    gr, gc = -(-M // W), -(-N // W)
-    out = np.zeros((gr * W, gc * W), np.float64)
-    for i in range(gr):
-        for j in range(gc):
-            acc = jnp.zeros((W, W), acc_dtype)
-            for k in range(-(-K // L)):
-                at = store.get(("a", la.page_of(i * W, k * L)))
-                # one B page is the full (L × W) block for this (k, j)
-                bt = store.get(("b", lb.page_of(k * L, j * W)))
-                acc = acc + jnp.dot(at, bt, preferred_element_type=acc_dtype)
-            out[i * W:(i + 1) * W, j * W:(j + 1) * W] = np.asarray(acc)
-    return out[:M, :N], store
+    plan = P.gemm_plan(M, N, K, a.dtype, page_bytes=page_bytes,
+                       order=order)
+    outs, store = execute_plan(plan, {"a": a, "b": b}, mode,
+                               cache_pages=cache_pages)
+    return outs["c"], store
 
 
 def tile_counts(M: int, N: int, K: int, dtype,

@@ -9,6 +9,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.overlap import choose_gemm_blocks
 from repro.kernels.flash_attention import flash_attention_raw
 from repro.kernels.paged_attention import paged_attention_raw
 from repro.kernels.streaming_gemm import streaming_gemm_raw
@@ -25,12 +26,20 @@ def _round_up(x, m):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def streaming_gemm(a, b, bm: int = 256, bn: int = 256, bk: int = 512,
+def streaming_gemm(a, b, bm: int | None = None, bn: int | None = None,
+                   bk: int | None = None,
                    interpret: bool | None = None):
-    """Paged streaming GEMM with automatic padding to block multiples."""
+    """Paged streaming GEMM with automatic padding to block multiples.
+
+    Block sizes default to the unified page-aligned overlap-bound
+    chooser (``core.overlap.choose_gemm_blocks``); pass explicit
+    bm/bn/bk to override."""
     interpret = _auto_interpret(interpret)
     M, K = a.shape
     _, N = b.shape
+    if bm is None or bn is None or bk is None:
+        cm, cn, ck = choose_gemm_blocks(M, N, K, a.dtype)
+        bm, bn, bk = bm or cm, bn or cn, bk or ck
     bm, bn, bk = min(bm, _round_up(M, 8)), min(bn, _round_up(N, 128)), \
         min(bk, _round_up(K, 128))
     Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)

@@ -3,7 +3,8 @@
 Paper → TPU mapping:
   * 4 KB page-aligned A/B tiles, one DMA descriptor per tile
       → BlockSpec tiles, one pipeline copy per grid step (block bytes are
-        kept page-multiple; see ``core.paging.page_aligned_blocks``)
+        kept page-multiple; see ``core.overlap.choose_gemm_blocks``, the
+        unified page-aligned + overlap-bound block chooser)
   * A0/A1,B0/B1 double buffering ∥ systolic compute ∥ C drain (Fig. 6)
       → the Pallas grid pipeline double-buffers HBM→VMEM input copies
         against MXU compute automatically; C is written once per (i, j)

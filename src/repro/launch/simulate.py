@@ -1,0 +1,66 @@
+"""Offline what-if simulation CLI over the StreamPlan IR.
+
+    PYTHONPATH=src python -m repro.launch.simulate --model bert-medium \
+        --modes DM DC DevMem --layers 2
+    PYTHONPATH=src python -m repro.launch.simulate --gemm 512 512 512
+
+Builds the requested plan (a single Algorithm-1 GEMM, or a composed
+N-layer transformer forward pass) and replays it against the accesys
+component models in each memory mode, printing end-to-end latency and
+the Fig.-2 bucket shares.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.accesys.components import DRAM
+from repro.accesys.pipeline import simulate_gemm
+from repro.accesys.system import (default_system, model_stream_plan,
+                                  run_transformer_composed)
+from repro.configs.paper_models import PAPER_MODELS
+
+
+def _fmt(r) -> str:
+    b = r.buckets()
+    shares = " ".join(f"{k}={v:5.1%}" for k, v in b.items())
+    return f"total={r.total_s*1e6:10.1f}us  {shares}  " \
+           f"tlb_miss={r.tlb_misses}  gops={r.gops:.1f}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", choices=sorted(PAPER_MODELS),
+                    help="composed transformer forward pass")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="cap the layer stack (default: full model)")
+    ap.add_argument("--gemm", type=int, nargs=3, metavar=("M", "N", "K"),
+                    help="single Algorithm-1 GEMM instead of a model")
+    ap.add_argument("--dtype", default="int8",
+                    choices=["int8", "int16", "int32", "fp8", "fp16",
+                             "fp32"])
+    ap.add_argument("--modes", nargs="+", default=["DM", "DC", "DevMem"],
+                    choices=["DM", "DC", "DevMem"])
+    ap.add_argument("--devmem-dram", default="HBM2",
+                    help="DRAM tech for DevMem mode (paper Fig. 12)")
+    args = ap.parse_args(argv)
+    if not args.model and not args.gemm:
+        ap.error("one of --model / --gemm is required")
+    if args.layers is not None and args.layers < 1:
+        ap.error("--layers must be >= 1")
+
+    for mode in args.modes:
+        dram = DRAM(args.devmem_dram) if mode == "DevMem" else None
+        cfg = default_system(mode, dtype=args.dtype, dram=dram)
+        if args.gemm:
+            m, n, k = args.gemm
+            r = simulate_gemm(cfg, m, n, k)
+            print(f"gemm{m}x{n}x{k} {args.dtype} {mode:7s} {_fmt(r)}")
+        else:
+            r = run_transformer_composed(cfg, args.model, args.layers)
+            nl = args.layers or PAPER_MODELS[args.model].n_layers
+            print(f"{args.model} x{nl} {args.dtype} {mode:7s} {_fmt(r)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

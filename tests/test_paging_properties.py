@@ -1,7 +1,12 @@
 """Hypothesis property tests on the paging/tiling invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import overlap, paging, streaming
 from repro.core.modes import MemoryMode

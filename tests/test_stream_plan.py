@@ -1,0 +1,186 @@
+"""StreamPlan IR invariants: coverage, page-load accounting, functional
+execution vs jnp oracles, composition, and the timing replayer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as P
+from repro.core import streaming
+from repro.core.modes import MemoryMode
+
+SHAPES = [(33, 41, 100), (64, 64, 64), (17, 100, 300), (1, 1, 1)]
+
+
+# ------------------------------------------------------------ structure
+@pytest.mark.parametrize("m,n,k", SHAPES)
+def test_plan_covers_every_output_tile_exactly_once(m, n, k):
+    plan = P.gemm_plan(m, n, k, np.float32)
+    plan.validate()
+    counts = streaming.tile_counts(m, n, k, np.float32)
+    seen = {}
+    for ev in plan.events:
+        if ev.kind is P.EventKind.COMPUTE:
+            key = (ev.meta["i"], ev.meta["j"])
+            if ev.meta["first_k"]:
+                assert key not in seen
+                seen[key] = 0
+            seen[key] += 1
+    assert len(seen) == counts["out_tiles"]
+    assert all(v == counts["k_steps"] for v in seen.values())
+    stores = [ev.page[1] for ev in plan.events
+              if ev.kind is P.EventKind.DMA_OUT]
+    assert sorted(stores) == sorted(seen)          # one drain per tile
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dtype", [np.int8, np.float16, np.float32])
+def test_plan_page_loads_match_tile_counts(m, n, k, dtype):
+    plan = P.gemm_plan(m, n, k, dtype)
+    counts = streaming.tile_counts(m, n, k, dtype)
+    c = plan.counts()
+    assert c["dma_in"]["a"] == counts["a_page_loads"]
+    assert c["dma_in"]["b"] == counts["b_page_loads"]
+    assert c["dma_out"]["c"] == counts["c_page_stores"]
+    assert c["sa_computes"] == counts["inner_steps"]
+    assert plan.total_steps == counts["inner_steps"]
+    assert plan.footprint_pages == counts["a_pages"] \
+        + counts["b_pages"] + counts["c_page_stores"]
+
+
+def test_compute_events_depend_on_their_dma_ins():
+    plan = P.gemm_plan(40, 50, 130, np.float32)
+    by_eid = {ev.eid: ev for ev in plan.events}
+    for ev in plan.events:
+        if ev.kind is not P.EventKind.COMPUTE:
+            continue
+        kinds = {by_eid[d].kind for d in ev.deps}
+        assert P.EventKind.DMA_IN in kinds
+        in_pages = {by_eid[d].page for d in ev.deps
+                    if by_eid[d].kind is P.EventKind.DMA_IN}
+        assert in_pages == {("a", ev.meta["a_page"]),
+                            ("b", ev.meta["b_page"])}
+        if not ev.meta["first_k"]:    # output-stationary accumulator chain
+            assert any(by_eid[d].kind is P.EventKind.COMPUTE
+                       for d in ev.deps)
+
+
+def test_lanes_split_a_and_b_channels():
+    plan = P.gemm_plan(64, 64, 300, np.float16)
+    lanes = {ev.page[0]: ev.lane for ev in plan.events
+             if ev.kind is P.EventKind.DMA_IN}
+    assert lanes == {"a": 0, "b": 1}
+
+
+def test_sampled_plan_keeps_first_and_last_k():
+    m = n = k = 512
+    full = P.gemm_plan(m, n, k, np.float32)
+    sampled = P.gemm_plan(m, n, k, np.float32, sample_stride=7)
+    assert 0 < sampled.sampled_steps < full.sampled_steps
+    assert sampled.total_steps == full.total_steps
+    firsts = {(e.meta["i"], e.meta["j"]) for e in sampled.events
+              if e.kind is P.EventKind.COMPUTE and e.meta["first_k"]}
+    lasts = {(e.meta["i"], e.meta["j"]) for e in sampled.events
+             if e.kind is P.EventKind.COMPUTE and e.meta["last_k"]}
+    full_tiles = {e.page[1] for e in full.events
+                  if e.kind is P.EventKind.DMA_OUT}
+    samp_tiles = {e.page[1] for e in sampled.events
+                  if e.kind is P.EventKind.DMA_OUT}
+    # every tile keeps its first-k (accumulator init) and last-k
+    # (drain) steps, and still drains exactly once
+    assert firsts == lasts == samp_tiles == full_tiles
+
+
+def test_concat_renumbers_and_merges():
+    g1 = P.gemm_plan(16, 16, 64, np.float32, c="t")
+    g2 = P.gemm_plan(16, 16, 16, np.float32, a="t", b="w", c="out")
+    comp = P.concat([g1, g2])
+    comp.validate()
+    assert comp.n_calls == 2
+    assert comp.macs == g1.macs + g2.macs
+    # "t" carries both its producer (C) and consumer (A) roles
+    assert comp.tensors["t"].roles == {"C", "A"}
+    # barrier: second sub-plan's first event depends on the first's last
+    first_of_g2 = comp.events[len(g1.events)]
+    assert comp.events[len(g1.events) - 1].eid in first_of_g2.deps
+
+
+# ------------------------------------------------------------ execution
+@pytest.mark.parametrize("dtype", [np.int8, np.float16, np.float32])
+def test_executed_gemm_plan_matches_jnp_dot(dtype):
+    rng = np.random.default_rng(3)
+    if np.issubdtype(dtype, np.integer):
+        a = rng.integers(-100, 100, (45, 70)).astype(dtype)
+        b = rng.integers(-100, 100, (70, 52)).astype(dtype)
+        acc = jnp.int32
+    else:
+        a = (rng.standard_normal((45, 70))).astype(dtype)
+        b = (rng.standard_normal((70, 52))).astype(dtype)
+        acc = jnp.float32
+    want = np.asarray(jnp.dot(jnp.asarray(a), jnp.asarray(b),
+                              preferred_element_type=acc), np.float64)
+    for mode in MemoryMode:
+        out, _ = streaming.gemm_streamed(a, b, mode, cache_pages=8)
+        tol = 1e-2 if dtype == np.float16 else 1e-5
+        np.testing.assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+def test_executed_attention_plan_matches_reference():
+    rng = np.random.default_rng(5)
+    S, hd = 24, 16
+    q = rng.standard_normal((S, hd)).astype(np.float32)
+    k = rng.standard_normal((S, hd)).astype(np.float32)
+    v = rng.standard_normal((S, hd)).astype(np.float32)
+    plan = P.attention_plan(S, hd, np.float32)
+    plan.validate()
+    outs, store = streaming.execute_plan(
+        plan, {"q": q, "kT": np.ascontiguousarray(k.T), "v": v},
+        MemoryMode.DM)
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(q @ k.T), axis=-1)) @ v
+    np.testing.assert_allclose(outs["attn"], ref, rtol=1e-4, atol=1e-5)
+    # DM streams every page: Q, K pages for QK^T plus P, V pages for PV
+    assert store.stats.host_to_device_bytes > 0
+    assert store.stats.cache_hits == 0
+
+
+def test_executed_transformer_layer_matches_reference():
+    rng = np.random.default_rng(0)
+    S, d, h, dff = 16, 32, 2, 64
+    x = rng.standard_normal((S, d)).astype(np.float32) * 0.5
+    w = {name: (rng.standard_normal(shape).astype(np.float32)
+                / np.sqrt(shape[0]))
+         for name, shape in P.layer_weights(d, dff).items()}
+    plan = P.transformer_layer_plan(S, d, h, dff, np.float32)
+    plan.validate()
+    outs, _ = streaming.execute_plan(plan, {"x": x, **w}, MemoryMode.DC)
+
+    def ln(z, eps=1e-5):
+        z = np.asarray(z, np.float64)
+        return (z - z.mean(-1, keepdims=True)) \
+            / np.sqrt(z.var(-1, keepdims=True) + eps)
+
+    qkv = x @ w["L0.wqkv"]
+    hd = d // h
+    heads = []
+    for i in range(h):
+        q = qkv[:, i * hd:(i + 1) * hd]
+        k = qkv[:, d + i * hd:d + (i + 1) * hd]
+        v = qkv[:, 2 * d + i * hd:2 * d + (i + 1) * hd]
+        p = np.asarray(jax.nn.softmax(jnp.asarray(q @ k.T), axis=-1))
+        heads.append(p @ v)
+    res1 = ln(x + np.concatenate(heads, axis=1) @ w["L0.wo"])
+    ff = np.asarray(jax.nn.gelu(jnp.asarray(
+        (res1 @ w["L0.w1"]).astype(np.float32))))
+    want = ln(res1 + ff @ w["L0.w2"])
+    np.testing.assert_allclose(outs["L0.out"], want, rtol=2e-3, atol=5e-4)
+
+
+def test_traffic_ordering_across_modes():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((33, 100)).astype(np.float32)
+    b = rng.standard_normal((100, 41)).astype(np.float32)
+    _, dm = streaming.gemm_streamed(a, b, MemoryMode.DM)
+    _, dc = streaming.gemm_streamed(a, b, MemoryMode.DC, cache_pages=64)
+    _, dv = streaming.gemm_streamed(a, b, MemoryMode.DEVMEM)
+    assert dm.stats.host_to_device_bytes >= dc.stats.host_to_device_bytes
+    assert dv.stats.host_to_device_bytes == 0

@@ -26,12 +26,14 @@ def _run(tmp, cfg=None, steps=14, inject=None, compression=False):
     return tr, run
 
 
+@pytest.mark.slow
 def test_loss_falls(tmp_path):
     tr, _ = _run(tmp_path)
     out = tr.train(14)
     assert out["final_loss"] < out["losses"][0]
 
 
+@pytest.mark.slow
 def test_crash_restart_resumes_exactly(tmp_path):
     tr, _ = _run(tmp_path / "a", inject=11)
     with pytest.raises(RuntimeError, match="injected node failure"):
@@ -57,6 +59,7 @@ def test_deterministic_data_replay():
     assert not np.array_equal(c.batch(8)["tokens"], b1["tokens"])
 
 
+@pytest.mark.slow
 def test_elastic_remesh_restore_subprocess(tmp_path):
     """Save on a (2,2) mesh, restore+step on a (4,1) mesh: elastic."""
     script = f"""
@@ -87,6 +90,7 @@ print("ELASTIC_OK", out_b["final_loss"])
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_straggler_watchdog_fires(tmp_path, monkeypatch):
     tr, _ = _run(tmp_path)
     orig = tr.step_fn
