@@ -166,15 +166,37 @@ def model_stream_plan(name: str, n_layers: Optional[int] = None,
                               cfg.n_heads, cfg.d_ff, layers, dtype)
 
 
+def model_stream_schedule(name: str, n_layers: Optional[int] = None,
+                          dtype: str = "int8",
+                          sample_stride: int = 1
+                          ) -> "plan_ir.PlanSchedule":
+    """Steady-state-sampled counterpart of ``model_stream_plan``: one
+    layer's sub-plans as segments, each repeated ``n_layers`` times —
+    the replayer walks one layer's events and scales, instead of
+    replaying hundreds of thousands of events exactly."""
+    cfg = PAPER_MODELS[name]
+    layers = cfg.n_layers if n_layers is None else n_layers
+    return plan_ir.model_schedule(cfg.max_train_seq, cfg.d_model,
+                                  cfg.n_heads, cfg.d_ff, layers, dtype,
+                                  sample_stride=sample_stride)
+
+
 def run_transformer_composed(cfg: SystemConfig, name: str,
                              n_layers: Optional[int] = None,
-                             cpu: Optional[CPUModel] = None) -> GemmResult:
+                             cpu: Optional[CPUModel] = None,
+                             sampled: bool = False,
+                             sample_stride: int = 1) -> GemmResult:
     """End-to-end replay of a composed multi-layer transformer plan —
     one event timeline across QKV / per-head attention / FFN instead of
     per-GEMM-class aggregation.  Returns the Fig.-2 buckets for the
-    whole forward pass."""
+    whole forward pass.  ``sampled=True`` replays the steady-state
+    schedule (one layer window x repeat) instead of the exact graph."""
     cpu = cpu or CPUModel()
-    plan = model_stream_plan(name, n_layers, cfg.sa.dtype)
+    if sampled:
+        plan = model_stream_schedule(name, n_layers, cfg.sa.dtype,
+                                     sample_stride)
+    else:
+        plan = model_stream_plan(name, n_layers, cfg.sa.dtype)
     return replay(cfg, plan,
                   host_s_per_elem=cpu.nongemm_cycles_per_elem / cpu.freq)
 

@@ -13,10 +13,20 @@ loop nest.  Two consumers share it:
     the Fig.-2 latency buckets.
 
 Builders cover the paper's GEMM (Algorithm 1), paged attention
-(QK^T -> softmax -> PV streaming over KV pages), and full transformer
-layers / N-layer models composed from per-op plans — which is what lets
-the accesys simulator produce end-to-end BERT/ViT-class numbers instead
-of per-GEMM ones.
+(QK^T -> softmax -> PV streaming over KV pages), full transformer
+layers / N-layer models composed from per-op plans, expert-routed MoE
+FFN layers (``moe_layer_plan`` — per-expert page sets sized by router
+capacity, mirroring ``models/moe.py``), scan-structured SSM layers
+(``ssm_layer_plan`` — chunked linear attention with a state-carry
+dependency chain, mirroring ``models/ssm.py``), and batched decode
+steps over a paged KV cache (``decode_step_plan`` — DMA_IN page ids
+taken verbatim from a live page table).
+
+``PlanSchedule`` is the steady-state-sampled view of a long composed
+plan: a list of (steady-window sub-plan, repeat count) segments.  The
+replayer times each window once and scales by its repeat count, so a
+full BERT-Base forward pass replays one layer's events instead of
+twelve layers' worth.
 """
 from __future__ import annotations
 
@@ -78,8 +88,11 @@ class Event:
 class TensorSpec:
     rows: int
     cols: int
-    roles: set                     # subset of {"A", "B", "C"}
+    roles: set                     # subset of {"A", "B", "C", "P"}
     kind: str = "input"            # input | weight | intermediate | output
+    # role "P" (paged): pre-paged pool tensor (e.g. a KV-cache pool);
+    # ``pages`` is the number of distinct pool pages the plan touches.
+    pages: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -94,6 +107,12 @@ class StreamPlan:
     n_calls: int = 0               # offloaded launches (doorbell+IRQ each)
     total_steps: int = 0           # inner steps the plan logically covers
     sampled_steps: int = 0         # steps materialized (== total unless sampled)
+    exact_events: int = 0          # events the unsampled plan would hold
+                                   # (0 -> len(events); see n_exact_events)
+
+    @property
+    def n_exact_events(self) -> int:
+        return self.exact_events or len(self.events)
 
     # ------------------------------------------------------------ info
     @property
@@ -109,6 +128,8 @@ class StreamPlan:
         return total
 
     def _role_pages(self, spec: TensorSpec, role: str) -> int:
+        if role == "P":
+            return spec.pages or 0
         if role == "C":
             w = paging.SA_DIM
             return (-(-spec.rows // w)) * (-(-spec.cols // w))
@@ -155,7 +176,7 @@ def concat(plans: Sequence[StreamPlan], name: str = "composed",
         raise ValueError("concat() needs at least one sub-plan")
     events: list = []
     tensors: dict = {}
-    macs = n_calls = total = sampled = 0
+    macs = n_calls = total = sampled = exact = 0
     offset = 0
     prev_last: Optional[int] = None
     dtype = plans[0].dtype
@@ -171,9 +192,12 @@ def concat(plans: Sequence[StreamPlan], name: str = "composed",
                 t.roles |= spec.roles
                 if spec.kind != "input":
                     t.kind = spec.kind
+                if spec.pages:
+                    t.pages = max(t.pages or 0, spec.pages)
             else:
                 tensors[name_] = TensorSpec(spec.rows, spec.cols,
-                                            set(spec.roles), spec.kind)
+                                            set(spec.roles), spec.kind,
+                                            spec.pages)
         for idx, ev in enumerate(p.events):
             deps = tuple(d + offset for d in ev.deps)
             if barrier and idx == 0 and prev_last is not None:
@@ -187,9 +211,57 @@ def concat(plans: Sequence[StreamPlan], name: str = "composed",
         n_calls += p.n_calls
         total += p.total_steps
         sampled += p.sampled_steps
+        exact += p.n_exact_events
     return StreamPlan(name, dtype, page_bytes, events, tensors,
                       macs=macs, n_calls=n_calls,
-                      total_steps=total, sampled_steps=sampled)
+                      total_steps=total, sampled_steps=sampled,
+                      exact_events=exact)
+
+
+# ----------------------------------------------------- sampled schedules
+@dataclasses.dataclass
+class PlanSchedule:
+    """Steady-state-sampled view of a composed plan.
+
+    ``segments`` is an ordered list of ``(StreamPlan, repeat)`` pairs:
+    each sub-plan is a steady window replayed once and scaled by its
+    repeat count (N identical transformer layers -> one layer's
+    sub-plans, each repeated N times).  The replayer walks segments
+    sequentially against shared SMMU/LLC state, so within-window page
+    reuse is timed exactly while the cross-repeat steady state is
+    assumed — the approximation that keeps a BERT-Base replay at tens of
+    thousands of events instead of hundreds of thousands.
+    """
+    name: str
+    segments: list                 # [(StreamPlan, int repeat)]
+
+    @property
+    def macs(self) -> int:
+        return sum(p.macs * r for p, r in self.segments)
+
+    @property
+    def n_calls(self) -> int:
+        return sum(p.n_calls * r for p, r in self.segments)
+
+    @property
+    def footprint_pages(self) -> int:
+        """SMMU-visible pages of the FULL (unsampled) workload: every
+        repeat owns its own tensors (layer i's weights are distinct
+        pages from layer j's), so windows count once per repeat."""
+        return sum(p.footprint_pages * r for p, r in self.segments)
+
+    @property
+    def sampled_events(self) -> int:
+        return sum(len(p.events) for p, _ in self.segments)
+
+    @property
+    def exact_events(self) -> int:
+        return sum(p.n_exact_events * r for p, r in self.segments)
+
+    def validate(self) -> None:
+        for p, r in self.segments:
+            assert r >= 1, (p.name, r)
+            p.validate()
 
 
 # ------------------------------------------------------------- Algorithm 1
@@ -293,7 +365,8 @@ def gemm_plan(M: int, N: int, K: int, dtype, *,
                c: TensorSpec(M, N, {"C"}, c_kind)}
     return StreamPlan(name or f"gemm{M}x{N}x{K}", np_dt, page_bytes,
                       events, tensors, macs=M * N * K, n_calls=1,
-                      total_steps=ni * nj * kk, sampled_steps=sampled)
+                      total_steps=ni * nj * kk, sampled_steps=sampled,
+                      exact_events=ni * nj * (3 * kk + 1))
 
 
 # ------------------------------------------------------------- host ops
@@ -301,55 +374,85 @@ def host_plan(op: str, inputs: Sequence[str], output: Optional[str],
               out_shape: Optional[tuple], elems: int, dtype,
               page_bytes: int = paging.PAGE_BYTES,
               meta: Optional[dict] = None,
-              out_kind: str = "intermediate") -> StreamPlan:
+              out_kind: str = "intermediate",
+              outs: Optional[Sequence[tuple]] = None) -> StreamPlan:
     """A single host-side COMPUTE event (softmax / layernorm / gelu /
     slice / concat / add / transpose — the paper keeps these on the CPU,
-    §4.2).  ``elems`` sizes the replayer's host-time model."""
+    §4.2).  ``elems`` sizes the replayer's host-time model.
+
+    ``outs`` (a sequence of ``(name, (rows, cols))`` pairs) declares a
+    multi-output op — e.g. MoE dispatch producing one routed buffer per
+    expert, or an SSM scan chunk producing (chunk output, carry state);
+    the executor stores every named result."""
     m = {"inputs": tuple(inputs), "out": output, "elems": elems}
+    if outs is not None:
+        m["outs"] = tuple(n for n, _ in outs)
     m.update(meta or {})
     ev = Event(0, EventKind.COMPUTE, op=op, unit="host", meta=m)
     tensors = {}
     if output is not None and out_shape is not None:
         tensors[output] = TensorSpec(out_shape[0], out_shape[1], set(),
                                      out_kind)
+    for name_, shape in (outs or ()):
+        tensors[name_] = TensorSpec(shape[0], shape[1], set(), out_kind)
     return StreamPlan(f"host.{op}", np_dtype_for(dtype), page_bytes,
                       [ev], tensors)
 
 
 # ----------------------------------------------------------- attention
-def attention_plan(S: int, d_head: int, dtype, *,
-                   q: str = "q", kT: str = "kT", v: str = "v",
-                   out: str = "attn", prefix: str = "",
-                   page_bytes: int = paging.PAGE_BYTES) -> StreamPlan:
-    """Paged attention for one head: QK^T streamed over K pages, host
-    softmax, then PV streamed over V pages (paper §4.2: MHA GEMMs on the
-    accelerator, softmax on the host)."""
+def _attention_plans(S: int, d_head: int, dtype, *,
+                     q: str = "q", kT: str = "kT", v: str = "v",
+                     out: str = "attn", prefix: str = "",
+                     page_bytes: int = paging.PAGE_BYTES,
+                     sample_stride: int = 1) -> list:
+    """The three attention sub-plans, kept separate so schedules can
+    stride the GEMMs without the stride scale bleeding into the host
+    softmax's time."""
     scores, p = prefix + "scores", prefix + "p"
-    return concat([
+    return [
         gemm_plan(S, S, d_head, dtype, a=q, b=kT, c=scores,
-                  c_kind="intermediate", page_bytes=page_bytes),
+                  c_kind="intermediate", page_bytes=page_bytes,
+                  sample_stride=sample_stride),
         host_plan("softmax", (scores,), p, (S, S), S * S, dtype,
                   page_bytes),
         gemm_plan(S, d_head, S, dtype, a=p, b=v, c=out,
-                  c_kind="intermediate", page_bytes=page_bytes),
-    ], name=f"attention{S}x{d_head}")
+                  c_kind="intermediate", page_bytes=page_bytes,
+                  sample_stride=sample_stride),
+    ]
+
+
+def attention_plan(S: int, d_head: int, dtype, *,
+                   q: str = "q", kT: str = "kT", v: str = "v",
+                   out: str = "attn", prefix: str = "",
+                   page_bytes: int = paging.PAGE_BYTES,
+                   sample_stride: int = 1) -> StreamPlan:
+    """Paged attention for one head: QK^T streamed over K pages, host
+    softmax, then PV streamed over V pages (paper §4.2: MHA GEMMs on the
+    accelerator, softmax on the host)."""
+    return concat(_attention_plans(S, d_head, dtype, q=q, kT=kT, v=v,
+                                   out=out, prefix=prefix,
+                                   page_bytes=page_bytes,
+                                   sample_stride=sample_stride),
+                  name=f"attention{S}x{d_head}")
 
 
 # ----------------------------------------------- transformer layer / model
-def transformer_layer_plan(S: int, d_model: int, n_heads: int, d_ff: int,
-                           dtype, *, x: str = "x", layer: int = 0,
-                           out: Optional[str] = None,
-                           page_bytes: int = paging.PAGE_BYTES
-                           ) -> StreamPlan:
-    """One post-LN encoder layer (BERT/ViT-class) as a composed plan:
-    QKV projection -> per-head paged attention -> output projection ->
-    residual+LN -> FFN (FF1, gelu, FF2) -> residual+LN.  GEMMs stream
-    through the accelerator; everything else is host work."""
+def _transformer_layer_plans(S: int, d_model: int, n_heads: int,
+                             d_ff: int, dtype, *, x: str = "x",
+                             layer: int = 0, out: Optional[str] = None,
+                             page_bytes: int = paging.PAGE_BYTES,
+                             sample_stride: int = 1) -> list:
+    """The ordered sub-plans of one encoder layer — shared by the exact
+    composed plan (``transformer_layer_plan``) and the steady-state
+    schedule (``model_schedule``, which keeps the sub-plans as separate
+    segments so strided GEMM sampling scales independently of the
+    unsampled host ops)."""
     P = f"L{layer}."
     hd = d_model // n_heads
     dt = dtype
+    ss = sample_stride
     plans = [gemm_plan(S, 3 * d_model, d_model, dt, a=x, b=P + "wqkv",
-                       c=P + "qkv", b_kind="weight",
+                       c=P + "qkv", b_kind="weight", sample_stride=ss,
                        c_kind="intermediate", page_bytes=page_bytes)]
     head_outs = []
     for h in range(n_heads):
@@ -365,9 +468,9 @@ def transformer_layer_plan(S: int, d_model: int, n_heads: int, d_ff: int,
             host_plan("slice_cols", (P + "qkv",), vh, (S, hd), S * hd, dt,
                       page_bytes, {"start": 2 * d_model + h * hd,
                                    "stop": 2 * d_model + (h + 1) * hd}),
-            attention_plan(S, hd, dt, q=qh, kT=kh, v=vh, out=oh,
-                           prefix=P + f"h{h}.", page_bytes=page_bytes),
-        ]
+        ] + _attention_plans(S, hd, dt, q=qh, kT=kh, v=vh, out=oh,
+                             prefix=P + f"h{h}.", page_bytes=page_bytes,
+                             sample_stride=ss)
         head_outs.append(oh)
     out = out or P + "out"
     plans += [
@@ -375,25 +478,40 @@ def transformer_layer_plan(S: int, d_model: int, n_heads: int, d_ff: int,
                   (S, d_model), S * d_model, dt, page_bytes),
         gemm_plan(S, d_model, d_model, dt, a=P + "attn", b=P + "wo",
                   c=P + "proj", b_kind="weight", c_kind="intermediate",
-                  page_bytes=page_bytes),
+                  page_bytes=page_bytes, sample_stride=ss),
         host_plan("add", (x, P + "proj"), P + "res1", (S, d_model),
                   S * d_model, dt, page_bytes),
         host_plan("layernorm", (P + "res1",), P + "ln1", (S, d_model),
                   2 * S * d_model, dt, page_bytes),
         gemm_plan(S, d_ff, d_model, dt, a=P + "ln1", b=P + "w1",
                   c=P + "ff1", b_kind="weight", c_kind="intermediate",
-                  page_bytes=page_bytes),
+                  page_bytes=page_bytes, sample_stride=ss),
         host_plan("gelu", (P + "ff1",), P + "g", (S, d_ff), S * d_ff, dt,
                   page_bytes),
         gemm_plan(S, d_model, d_ff, dt, a=P + "g", b=P + "w2",
                   c=P + "ff2", b_kind="weight", c_kind="intermediate",
-                  page_bytes=page_bytes),
+                  page_bytes=page_bytes, sample_stride=ss),
         host_plan("add", (P + "ln1", P + "ff2"), P + "res2", (S, d_model),
                   S * d_model, dt, page_bytes),
         host_plan("layernorm", (P + "res2",), out, (S, d_model),
                   2 * S * d_model, dt, page_bytes,
                   out_kind="output"),
     ]
+    return plans
+
+
+def transformer_layer_plan(S: int, d_model: int, n_heads: int, d_ff: int,
+                           dtype, *, x: str = "x", layer: int = 0,
+                           out: Optional[str] = None,
+                           page_bytes: int = paging.PAGE_BYTES,
+                           sample_stride: int = 1) -> StreamPlan:
+    """One post-LN encoder layer (BERT/ViT-class) as a composed plan:
+    QKV projection -> per-head paged attention -> output projection ->
+    residual+LN -> FFN (FF1, gelu, FF2) -> residual+LN.  GEMMs stream
+    through the accelerator; everything else is host work."""
+    plans = _transformer_layer_plans(
+        S, d_model, n_heads, d_ff, dtype, x=x, layer=layer, out=out,
+        page_bytes=page_bytes, sample_stride=sample_stride)
     return concat(plans, name=f"layer{layer}")
 
 
@@ -412,6 +530,23 @@ def model_plan(S: int, d_model: int, n_heads: int, d_ff: int,
     return concat(plans, name=f"transformer{n_layers}x{d_model}")
 
 
+def model_schedule(S: int, d_model: int, n_heads: int, d_ff: int,
+                   n_layers: int, dtype, *, x: str = "x",
+                   page_bytes: int = paging.PAGE_BYTES,
+                   sample_stride: int = 1) -> PlanSchedule:
+    """Steady-state-sampled counterpart of ``model_plan``: the layer
+    stack is homogeneous, so one layer is the steady window — each of
+    its sub-plans becomes a segment repeated ``n_layers`` times.  With
+    ``sample_stride > 1`` the GEMM segments are additionally
+    steady-state sampled inside the window; host-op segments are never
+    strided, so their time scales only by the repeat count."""
+    plans = _transformer_layer_plans(
+        S, d_model, n_heads, d_ff, dtype, x=x, layer=0,
+        page_bytes=page_bytes, sample_stride=sample_stride)
+    return PlanSchedule(f"transformer{n_layers}x{d_model}~sampled",
+                        [(p, n_layers) for p in plans])
+
+
 def layer_weights(d_model: int, d_ff: int, layer: int = 0) -> dict:
     """Shapes of the weight tensors one layer plan expects — handy for
     building executor inputs."""
@@ -420,3 +555,305 @@ def layer_weights(d_model: int, d_ff: int, layer: int = 0) -> dict:
             P + "wo": (d_model, d_model),
             P + "w1": (d_model, d_ff),
             P + "w2": (d_ff, d_model)}
+
+
+# ------------------------------------------------------------- MoE layer
+def _moe_layer_plans(n_tokens: int, d_model: int, n_experts: int,
+                     top_k: int, d_ff: int, dtype, *,
+                     capacity: Optional[int] = None,
+                     capacity_factor: float = 1.25,
+                     act: str = "silu", x: str = "x", layer: int = 0,
+                     out: Optional[str] = None,
+                     page_bytes: int = paging.PAGE_BYTES,
+                     sample_stride: int = 1) -> list:
+    from repro.models.moe import routed_capacity
+    P = f"M{layer}."
+    C = routed_capacity(n_tokens * top_k, n_experts, capacity,
+                        capacity_factor)
+    dt = dtype
+    ss = sample_stride
+    logits = P + "logits"
+    plans = [
+        gemm_plan(n_tokens, n_experts, d_model, dt, a=x,
+                  b=P + "router", c=logits, b_kind="weight",
+                  c_kind="intermediate", page_bytes=page_bytes,
+                  sample_stride=ss),
+        host_plan("moe_dispatch", (x, logits), None, None,
+                  n_experts * C * d_model, dt, page_bytes,
+                  meta={"E": n_experts, "k": top_k, "C": C},
+                  outs=[(P + f"e{e}.buf", (C, d_model))
+                        for e in range(n_experts)]),
+    ]
+    for e in range(n_experts):
+        E = P + f"e{e}."
+        plans += [
+            gemm_plan(C, d_ff, d_model, dt, a=E + "buf", b=E + "wg",
+                      c=E + "g", b_kind="weight", c_kind="intermediate",
+                      page_bytes=page_bytes, sample_stride=ss),
+            gemm_plan(C, d_ff, d_model, dt, a=E + "buf", b=E + "wu",
+                      c=E + "u", b_kind="weight", c_kind="intermediate",
+                      page_bytes=page_bytes, sample_stride=ss),
+            host_plan("act_mul", (E + "g", E + "u"), E + "h",
+                      (C, d_ff), 2 * C * d_ff, dt, page_bytes,
+                      meta={"act": act}),
+            gemm_plan(C, d_model, d_ff, dt, a=E + "h", b=E + "wo",
+                      c=E + "y", b_kind="weight", c_kind="intermediate",
+                      page_bytes=page_bytes, sample_stride=ss),
+        ]
+    out = out or P + "out"
+    plans.append(host_plan(
+        "moe_combine",
+        (logits,) + tuple(P + f"e{e}.y" for e in range(n_experts)),
+        out, (n_tokens, d_model), n_tokens * top_k * d_model, dt,
+        page_bytes, meta={"E": n_experts, "k": top_k, "C": C},
+        out_kind="output"))
+    return plans
+
+
+def moe_layer_plan(n_tokens: int, d_model: int, n_experts: int,
+                   top_k: int, d_ff: int, dtype, *,
+                   capacity: Optional[int] = None,
+                   capacity_factor: float = 1.25,
+                   act: str = "silu", x: str = "x", layer: int = 0,
+                   out: Optional[str] = None,
+                   page_bytes: int = paging.PAGE_BYTES) -> StreamPlan:
+    """Expert-routed FFN layer mirroring ``models/moe.py`` grouped-GEMM
+    dispatch: router GEMM on the accelerator, host-side top-k sort /
+    capacity-C dispatch into per-expert buffers, then per expert the
+    gated-FFN GEMM triple (wi_gate, wi_up, wo) over its fixed-capacity
+    buffer, and a host combine weighted by the routing probs.
+
+    Every expert streams exactly its capacity-C page set (the routed
+    buffers are page-aligned fixed-shape blocks, the activation-side
+    analogue of the paper's tiles), so the plan's per-expert page
+    traffic is statically known — sum of expert page sets == pages of
+    the E x C routed token block.  For strided steady-state sampling
+    use ``moe_schedule``: a single strided plan would scale its
+    unsampled host ops by the GEMM stride."""
+    from repro.models.moe import routed_capacity
+    plans = _moe_layer_plans(n_tokens, d_model, n_experts, top_k, d_ff,
+                             dtype, capacity=capacity,
+                             capacity_factor=capacity_factor, act=act,
+                             x=x, layer=layer, out=out,
+                             page_bytes=page_bytes)
+    C = routed_capacity(n_tokens * top_k, n_experts, capacity,
+                        capacity_factor)
+    return concat(plans, name=f"moe{layer}.{n_experts}x{C}x{d_ff}")
+
+
+def moe_schedule(n_tokens: int, d_model: int, n_experts: int,
+                 top_k: int, d_ff: int, n_layers: int, dtype, *,
+                 capacity: Optional[int] = None,
+                 capacity_factor: float = 1.25, act: str = "silu",
+                 x: str = "x",
+                 page_bytes: int = paging.PAGE_BYTES,
+                 sample_stride: int = 1) -> PlanSchedule:
+    """Steady-state-sampled N-layer MoE FFN stack: one layer's
+    sub-plans as segments repeated ``n_layers`` times, GEMM segments
+    optionally strided — host ops stay separate segments so their time
+    scales only by the repeat count."""
+    plans = _moe_layer_plans(n_tokens, d_model, n_experts, top_k, d_ff,
+                             dtype, capacity=capacity,
+                             capacity_factor=capacity_factor, act=act,
+                             x=x, layer=0, page_bytes=page_bytes,
+                             sample_stride=sample_stride)
+    return PlanSchedule(f"moe_x{n_layers}~sampled",
+                        [(p, n_layers) for p in plans])
+
+
+def moe_layer_weights(d_model: int, n_experts: int, d_ff: int,
+                      layer: int = 0) -> dict:
+    """Shapes of the weight tensors ``moe_layer_plan`` expects."""
+    P = f"M{layer}."
+    w = {P + "router": (d_model, n_experts)}
+    for e in range(n_experts):
+        w[P + f"e{e}.wg"] = (d_model, d_ff)
+        w[P + f"e{e}.wu"] = (d_model, d_ff)
+        w[P + f"e{e}.wo"] = (d_ff, d_model)
+    return w
+
+
+# ------------------------------------------------------------- SSM layer
+def _ssm_layer_plans(T: int, d_model: int, n_heads: int, dtype, *,
+                     chunk: int = 16, x: str = "x", layer: int = 0,
+                     out: Optional[str] = None, inclusive: bool = True,
+                     page_bytes: int = paging.PAGE_BYTES,
+                     sample_stride: int = 1) -> list:
+    P = f"S{layer}."
+    N = d_model // n_heads
+    dt = dtype
+    ss = sample_stride
+    plans = [
+        gemm_plan(T, d_model, d_model, dt, a=x, b=P + "wr", c=P + "r",
+                  b_kind="weight", c_kind="intermediate",
+                  page_bytes=page_bytes, sample_stride=ss),
+        gemm_plan(T, d_model, d_model, dt, a=x, b=P + "wk", c=P + "k",
+                  b_kind="weight", c_kind="intermediate",
+                  page_bytes=page_bytes, sample_stride=ss),
+        gemm_plan(T, d_model, d_model, dt, a=x, b=P + "wv", c=P + "v",
+                  b_kind="weight", c_kind="intermediate",
+                  page_bytes=page_bytes, sample_stride=ss),
+    ]
+    nc = -(-T // chunk)
+    state = P + "s0"
+    chunk_outs = []
+    for c in range(nc):
+        t0, t1 = c * chunk, min(T, (c + 1) * chunk)
+        o, s = P + f"c{c}.o", P + f"c{c}.s"
+        plans.append(host_plan(
+            "ssm_scan", (P + "r", P + "k", P + "v", P + "logw", state),
+            None, None, (t1 - t0) * n_heads * N * N, dt, page_bytes,
+            meta={"t0": t0, "t1": t1, "H": n_heads, "N": N,
+                  "inclusive": inclusive},
+            outs=[(o, (t1 - t0, d_model)), (s, (n_heads * N, N))]))
+        state = s
+        chunk_outs.append(o)
+    out = out or P + "out"
+    plans += [
+        host_plan("concat_rows", tuple(chunk_outs), P + "scan",
+                  (T, d_model), T * d_model, dt, page_bytes),
+        gemm_plan(T, d_model, d_model, dt, a=P + "scan", b=P + "wo",
+                  c=out, b_kind="weight", c_kind="output",
+                  page_bytes=page_bytes, sample_stride=ss),
+    ]
+    # register the caller-supplied scan inputs on the first sub-plan so
+    # both the concat plan and schedule segments know their shapes
+    plans[0].tensors[P + "logw"] = TensorSpec(T, d_model, set(), "input")
+    plans[0].tensors[P + "s0"] = TensorSpec(n_heads * N, N, set(),
+                                            "input")
+    return plans
+
+
+def ssm_layer_plan(T: int, d_model: int, n_heads: int, dtype, *,
+                   chunk: int = 16, x: str = "x", layer: int = 0,
+                   out: Optional[str] = None, inclusive: bool = True,
+                   page_bytes: int = paging.PAGE_BYTES) -> StreamPlan:
+    """Scan-structured SSM layer mirroring ``models/ssm.py``: r/k/v
+    projections stream through the accelerator, then the sequence is
+    processed in pages (chunks) by host-side chunked linear attention —
+    each chunk's COMPUTE depends on the previous chunk's carry state
+    (the O(state) recurrence that replaces a giant KV cache), forming
+    an explicit scan dependency chain — and the gathered outputs feed
+    the output projection GEMM.
+
+    Caller supplies ``S{layer}.logw`` (per-token log-decay, (T, d)) and
+    ``S{layer}.s0`` (initial state, (H*N, N)) alongside ``x`` and the
+    weights from ``ssm_layer_weights``.  For strided steady-state
+    sampling use ``ssm_schedule`` (host scan ops must not inherit the
+    GEMM stride scale)."""
+    plans = _ssm_layer_plans(T, d_model, n_heads, dtype, chunk=chunk,
+                             x=x, layer=layer, out=out,
+                             inclusive=inclusive, page_bytes=page_bytes)
+    return concat(plans, name=f"ssm{layer}.{T}x{d_model}c{chunk}")
+
+
+def ssm_schedule(T: int, d_model: int, n_heads: int, n_layers: int,
+                 dtype, *, chunk: int = 16, x: str = "x",
+                 inclusive: bool = True,
+                 page_bytes: int = paging.PAGE_BYTES,
+                 sample_stride: int = 1) -> PlanSchedule:
+    """Steady-state-sampled N-layer SSM stack; see ``moe_schedule``."""
+    plans = _ssm_layer_plans(T, d_model, n_heads, dtype, chunk=chunk,
+                             x=x, layer=0, inclusive=inclusive,
+                             page_bytes=page_bytes,
+                             sample_stride=sample_stride)
+    return PlanSchedule(f"ssm_x{n_layers}~sampled",
+                        [(p, n_layers) for p in plans])
+
+
+def ssm_layer_weights(d_model: int, layer: int = 0) -> dict:
+    """Shapes of the weight tensors ``ssm_layer_plan`` expects."""
+    P = f"S{layer}."
+    return {P + w: (d_model, d_model) for w in ("wr", "wk", "wv", "wo")}
+
+
+# ------------------------------------------------------------ decode step
+def decode_step_plan(page_tables: Sequence[Sequence[int]],
+                     lens: Sequence[int], page_tokens: int,
+                     n_kv_heads: int, head_dim: int, elem: int, *,
+                     q: str = "q", k: str = "k", v: str = "v",
+                     out: str = "decode_out",
+                     scale: Optional[float] = None,
+                     name: str = "decode_step") -> StreamPlan:
+    """One batched decode step over a paged KV cache: for every active
+    sequence, DMA-in its K pages (ids taken VERBATIM from the page
+    table, so plan page traffic equals the pool pages actually
+    resident), one QK^T tile per page on the accelerator, drain the
+    score blocks, host masked-softmax over the valid length, then the
+    PV accumulation streamed over the V pages and one output drain.
+
+    ``page_tables[b]`` lists the pool page ids sequence b holds;
+    ``lens[b]`` is its valid token count; ``elem`` is the KV element
+    size in bytes.  The plan's ``page_bytes`` is the KV page size, and
+    total DMA_IN bytes == 2 * sum(held_pages) * page_bytes — the bytes
+    actually resident for the batch."""
+    pt, KH, hd = page_tokens, n_kv_heads, head_dim
+    H = KH                          # MHA: one query head per KV head
+    page_bytes = pt * KH * hd * elem
+    np_dt = _NP_FOR_ELEM[elem]
+    scale = scale if scale is not None else hd ** -0.5
+    events: list = []
+    eid = 0
+    macs = 0
+    B = len(page_tables)
+    tensors = {q: TensorSpec(B, H * hd, set(), "input"),
+               out: TensorSpec(B * H, hd, {"C"}, "output")}
+    k_pages: set = set()
+    v_pages: set = set()
+    for b, (tbl, ln) in enumerate(zip(page_tables, lens)):
+        tbl = [int(p) for p in tbl]
+        npg = len(tbl)
+        if npg == 0:
+            continue
+        scores, p = f"{out}.s{b}", f"{out}.p{b}"
+        tensors[scores] = TensorSpec(H, npg * pt, set(), "intermediate")
+        tensors[p] = TensorSpec(H, npg * pt, set(), "intermediate")
+        for pi, pid in enumerate(tbl):
+            k_pages.add(pid)
+            ek = Event(eid, EventKind.DMA_IN, nbytes=page_bytes,
+                       page=(k, pid), lane=0, op="load")
+            ec = Event(eid + 1, EventKind.COMPUTE, deps=(ek.eid,),
+                       op="attn_qk", unit="sa",
+                       meta={"q": q, "k": k, "page": pid, "slot": b,
+                             "page_idx": pi, "heads": H, "head_dim": hd,
+                             "pt": pt, "depth": hd, "scores": scores})
+            eo = Event(eid + 2, EventKind.DMA_OUT, nbytes=H * pt * elem,
+                       page=(scores, (0, pi)), deps=(ec.eid,),
+                       op="store", meta={"at": (0, pi * pt)})
+            events += [ek, ec, eo]
+            eid += 3
+        sm = Event(eid, EventKind.COMPUTE, deps=(eid - 1,),
+                   op="masked_softmax", unit="host",
+                   meta={"inputs": (scores,), "out": p,
+                         "elems": H * npg * pt, "valid": int(ln),
+                         "scale": scale})
+        events.append(sm)
+        eid += 1
+        chain = None
+        for pi, pid in enumerate(tbl):
+            v_pages.add(pid)
+            ev = Event(eid, EventKind.DMA_IN, nbytes=page_bytes,
+                       page=(v, pid), lane=1, op="load")
+            deps = (ev.eid, sm.eid) if chain is None \
+                else (ev.eid, sm.eid, chain)
+            ec = Event(eid + 1, EventKind.COMPUTE, deps=deps,
+                       op="attn_pv", unit="sa",
+                       meta={"p": p, "v": v, "page": pid, "slot": b,
+                             "page_idx": pi, "heads": H, "head_dim": hd,
+                             "pt": pt, "depth": pt, "out": out,
+                             "first": pi == 0, "last": pi == npg - 1})
+            events += [ev, ec]
+            chain = ec.eid
+            eid += 2
+        events.append(Event(eid, EventKind.DMA_OUT,
+                            nbytes=H * hd * elem, page=(out, (b, 0)),
+                            deps=(chain,), op="store",
+                            meta={"at": (b * H, 0)}))
+        eid += 1
+        macs += npg * pt * H * hd * 2          # QK^T + PV per page
+    tensors[k] = TensorSpec(len(k_pages) * pt, KH * hd, {"P"}, "input",
+                            pages=len(k_pages))
+    tensors[v] = TensorSpec(len(v_pages) * pt, KH * hd, {"P"}, "input",
+                            pages=len(v_pages))
+    return StreamPlan(name, np_dt, page_bytes, events, tensors,
+                      macs=macs, n_calls=1)

@@ -54,6 +54,82 @@ def _slice_cols(x, meta):
     return out.T if meta.get("transpose") else out
 
 
+def _layernorm(x, eps: float = 1e-5):
+    x = np.asarray(x, np.float64)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + eps)
+
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def _act_mul(xs, m):
+    return np.asarray(_ACTS[m["act"]](jnp.asarray(xs[0], jnp.float32))
+                      * jnp.asarray(xs[1], jnp.float32))
+
+
+def _moe_route(logits, k: int, C: int):
+    """Replicates ``models.moe.apply_moe`` global dispatch: softmax ->
+    top-k -> stable sort by expert -> capacity-C keep mask.  Returns
+    (e_sorted, tok_sorted, pos_in_e, keep, sorted norm'd probs).
+    Dispatch and combine each recompute this deterministically — host
+    ops stay stateless functions of (inputs, meta), which matters more
+    than one redundant O(n*k log) sort in a reference executor."""
+    probs = jax.nn.softmax(jnp.asarray(logits, jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    n, E = logits.shape
+    flat_e = np.asarray(top_e).reshape(-1)
+    flat_tok = np.repeat(np.arange(n), k)
+    flat_p = np.asarray(top_p, np.float64).reshape(-1)
+    order = np.argsort(flat_e, kind="stable")
+    e_sorted = flat_e[order]
+    counts = np.bincount(flat_e, minlength=E)
+    starts = np.cumsum(counts) - counts
+    pos_in_e = np.arange(n * k) - starts[e_sorted]
+    return (e_sorted, flat_tok[order], pos_in_e, pos_in_e < C,
+            flat_p[order])
+
+
+def _moe_dispatch(xs, m):
+    x = np.asarray(xs[0], np.float64)
+    e_sorted, tok_sorted, pos, keep, _ = _moe_route(xs[1], m["k"], m["C"])
+    bufs = [np.zeros((m["C"], x.shape[1])) for _ in range(m["E"])]
+    for i in np.nonzero(keep)[0]:
+        bufs[e_sorted[i]][pos[i]] = x[tok_sorted[i]]
+    return tuple(bufs)
+
+
+def _moe_combine(xs, m):
+    e_sorted, tok_sorted, pos, keep, p_sorted = \
+        _moe_route(xs[0], m["k"], m["C"])
+    ys = [np.asarray(y, np.float64) for y in xs[1:]]
+    out = np.zeros((xs[0].shape[0], ys[0].shape[1]))
+    for i in np.nonzero(keep)[0]:
+        out[tok_sorted[i]] += p_sorted[i] * ys[e_sorted[i]][pos[i]]
+    return out
+
+
+def _ssm_scan(xs, m):
+    from repro.models.ssm import scan_chunk_2d
+    t0, t1 = m["t0"], m["t1"]
+    r, k, v, logw, state = xs
+    out, s = scan_chunk_2d(r[t0:t1], k[t0:t1], v[t0:t1], logw[t0:t1],
+                           state, m["H"], m["N"],
+                           inclusive=m["inclusive"])
+    return np.asarray(out), np.asarray(s)
+
+
+def _masked_softmax(xs, m):
+    s = np.asarray(xs[0], np.float64) * m["scale"]
+    valid = m["valid"]
+    s[:, valid:] = -np.inf
+    e = np.exp(s - s.max(-1, keepdims=True))
+    e[:, valid:] = 0.0
+    return e / np.maximum(e.sum(-1, keepdims=True), 1e-30)
+
+
 _HOST_OPS = {
     "softmax": lambda xs, m: np.asarray(jax.nn.softmax(
         jnp.asarray(xs[0], jnp.float32), axis=-1)),
@@ -63,31 +139,36 @@ _HOST_OPS = {
     "add": lambda xs, m: xs[0] + xs[1],
     "slice_cols": lambda xs, m: _slice_cols(xs[0], m),
     "concat_cols": lambda xs, m: np.concatenate(xs, axis=1),
+    "concat_rows": lambda xs, m: np.concatenate(xs, axis=0),
     "transpose": lambda xs, m: xs[0].T,
+    "act_mul": _act_mul,
+    "moe_dispatch": _moe_dispatch,
+    "moe_combine": _moe_combine,
+    "ssm_scan": _ssm_scan,
+    "masked_softmax": _masked_softmax,
 }
-
-
-def _layernorm(x, eps: float = 1e-5):
-    x = np.asarray(x, np.float64)
-    mu = x.mean(-1, keepdims=True)
-    var = x.var(-1, keepdims=True)
-    return (x - mu) / np.sqrt(var + eps)
 
 
 # -------------------------------------------------------------- executor
 def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
-                 cache_pages: int = 512):
+                 cache_pages: int = 512, paged: dict = None):
     """Run a StreamPlan numerically through a mode-aware PageStore.
 
     ``tensors`` maps input/weight tensor names to host arrays; returns
     ``(outputs, store)`` where ``outputs`` maps every produced tensor
     name to its materialized array and the store's TrafficStats carry
     the measured host<->device traffic per mode.
+
+    ``paged`` maps pre-paged pool tensor names (role "P", e.g. a KV
+    cache) to ``{page_id: page array}`` — those pages stream through
+    the store under their POOL page ids, exactly as the page table
+    names them, instead of being re-packed from a dense matrix.
     """
     np_dt = np.dtype(plan.dtype)
     acc_dtype = jnp.int32 if np.issubdtype(np_dt, np.integer) \
         else jnp.float32
     store = PageStore({}, mode, cache_pages=cache_pages)
+    paged = paged or {}
     packed: set = set()
     layouts: dict = {}
     mats: dict = dict(tensors)     # materialized full tensors (host side)
@@ -99,7 +180,17 @@ def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
     def ensure_packed(name: str) -> None:
         if name in packed:
             return
+        if name in paged:          # pool tensor: pages come pre-cut
+            store.add_pages({(name, int(pid)): np.asarray(arr)
+                             for pid, arr in paged[name].items()})
+            packed.add(name)
+            return
         spec = plan.tensors[name]
+        if "P" in spec.roles:
+            # pool page ids come verbatim from a page table; a dense
+            # repack would index a different page grid entirely
+            raise ValueError(
+                f"pool tensor {name!r} must be supplied via `paged=`")
         if {"A", "B"} <= spec.roles:
             # page ids for A (row-major) and B (row-striped) layouts
             # index different page grids; one physical page set cannot
@@ -130,17 +221,38 @@ def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
             buf[ev.page] = store.get(ev.page)
         elif ev.kind is P.EventKind.COMPUTE and ev.unit == "sa":
             m = ev.meta
-            at = buf.pop((m["a"], m["a_page"]))
-            bt = buf.pop((m["b"], m["b_page"]))
-            key = (m["c"], m["i"], m["j"])
-            part = jnp.dot(at, bt, preferred_element_type=acc_dtype)
-            acc[key] = part if m["first_k"] else acc[key] + part
+            if ev.op == "attn_qk":     # q_b x one K page -> score block
+                page = np.asarray(buf.pop((m["k"], m["page"])),
+                                  np.float32)
+                qb = np.asarray(materialize(m["q"]))[m["slot"]] \
+                    .reshape(m["heads"], m["head_dim"]).astype(np.float32)
+                acc[(m["scores"], 0, m["page_idx"])] = \
+                    jnp.einsum("hd,thd->ht", qb, page)
+            elif ev.op == "attn_pv":   # prob block x one V page, accum
+                page = np.asarray(buf.pop((m["v"], m["page"])),
+                                  np.float32)
+                pt = m["pt"]
+                pb = np.asarray(materialize(m["p"]))[
+                    :, m["page_idx"] * pt:(m["page_idx"] + 1) * pt
+                ].astype(np.float32)
+                part = jnp.einsum("ht,thd->hd", pb, page)
+                key = (m["out"], m["slot"], 0)
+                acc[key] = part if m["first"] else acc[key] + part
+            else:                      # gemm: one W×W×depth tile step
+                at = buf.pop((m["a"], m["a_page"]))
+                bt = buf.pop((m["b"], m["b_page"]))
+                key = (m["c"], m["i"], m["j"])
+                part = jnp.dot(at, bt, preferred_element_type=acc_dtype)
+                acc[key] = part if m["first_k"] else acc[key] + part
         elif ev.kind is P.EventKind.COMPUTE:
             m = ev.meta
             ins = [np.asarray(materialize(n)) for n in m["inputs"]]
-            mats[m["out"]] = np.asarray(_HOST_OPS[ev.op](ins, m))
-            produced.add(m["out"])
-        else:                       # DMA_OUT: drain one W×W C tile
+            res = _HOST_OPS[ev.op](ins, m)
+            for name, r in zip(m.get("outs") or (m["out"],),
+                               res if "outs" in m else (res,)):
+                mats[name] = np.asarray(r)
+                produced.add(name)
+        else:                       # DMA_OUT: drain one accumulated tile
             name, (i, j) = ev.page
             spec = plan.tensors[name]
             w = paging.SA_DIM
@@ -148,7 +260,9 @@ def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
                 gr, gc = -(-spec.rows // w), -(-spec.cols // w)
                 out_bufs[name] = np.zeros((gr * w, gc * w), np.float64)
             tile = np.asarray(acc.pop((name, i, j)))
-            out_bufs[name][i * w:(i + 1) * w, j * w:(j + 1) * w] = tile
+            r0, c0 = ev.meta.get("at", (i * w, j * w))
+            out_bufs[name][r0:r0 + tile.shape[0],
+                           c0:c0 + tile.shape[1]] = tile
             produced.add(name)
     outputs = {n: np.asarray(materialize(n)) for n in produced}
     return outputs, store

@@ -3,21 +3,44 @@
     PYTHONPATH=src python -m repro.launch.simulate --model bert-medium \
         --modes DM DC DevMem --layers 2
     PYTHONPATH=src python -m repro.launch.simulate --gemm 512 512 512
+    PYTHONPATH=src python -m repro.launch.simulate --workload moe
+    PYTHONPATH=src python -m repro.launch.simulate --workload decode
 
-Builds the requested plan (a single Algorithm-1 GEMM, or a composed
-N-layer transformer forward pass) and replays it against the accesys
-component models in each memory mode, printing end-to-end latency and
-the Fig.-2 bucket shares.
+Builds the requested plan — a single Algorithm-1 GEMM, a composed
+N-layer transformer forward pass, or one of the workload classes the
+plan layer can express (``bert``/``vit`` dense encoders, ``moe``
+expert-routed FFN stacks, ``ssm`` scan layers, ``decode`` paged-KV
+decode steps) — and replays it against the accesys component models in
+each memory mode, printing end-to-end latency and the Fig.-2 bucket
+shares.
+
+Workloads replay steady-state sampled by default (one layer window x
+repeat count; ``--sample-stride`` additionally strides the GEMM inner
+loops); ``--exact`` materializes and replays the full composed event
+graph.  The events-replayed vs events-total line makes the sampling
+speedup visible.
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.accesys.components import DRAM
-from repro.accesys.pipeline import simulate_gemm
+from repro.accesys.pipeline import replay, simulate_gemm
 from repro.accesys.system import (default_system, model_stream_plan,
-                                  run_transformer_composed)
+                                  model_stream_schedule)
 from repro.configs.paper_models import PAPER_MODELS
+from repro.core import plan as plan_ir
+
+WORKLOAD_MODELS = {"bert": "bert-base", "vit": "vit-base-16"}
+WORKLOADS = ("bert", "vit", "moe", "ssm", "decode")
+
+# tiny-but-representative geometry for the synthetic workload classes
+MOE_SHAPE = dict(n_tokens=64, d_model=128, n_experts=8, top_k=2,
+                 d_ff=256)
+SSM_SHAPE = dict(T=128, d_model=128, n_heads=4, chunk=16)
+DECODE_SHAPE = dict(n_pages=64, page_tokens=8, n_kv_heads=4,
+                    head_dim=32, max_pages_per_seq=8,
+                    prompt_lens=(20, 9, 33))
 
 
 def _fmt(r) -> str:
@@ -27,12 +50,86 @@ def _fmt(r) -> str:
            f"tlb_miss={r.tlb_misses}  gops={r.gops:.1f}"
 
 
+def _decode_plan(dtype: str) -> "plan_ir.StreamPlan":
+    """A decode step over a LIVE paged KV cache: admit a few sequences,
+    append/retire to churn the free list, then plan from the real page
+    tables."""
+    import jax.numpy as jnp
+    from repro.serving.kv_cache import PagedCacheConfig, PagedKVCache
+    sh = DECODE_SHAPE
+    np_dt = plan_ir.np_dtype_for(dtype)
+    cfg = PagedCacheConfig(
+        n_pages=sh["n_pages"], page_tokens=sh["page_tokens"],
+        n_kv_heads=sh["n_kv_heads"], head_dim=sh["head_dim"],
+        max_pages_per_seq=sh["max_pages_per_seq"], dtype=np_dt)
+    cache = PagedKVCache(cfg, max_seqs=len(sh["prompt_lens"]))
+    kv = lambda t: jnp.zeros((t, cfg.n_kv_heads, cfg.head_dim), np_dt)
+    for slot, ln in enumerate(sh["prompt_lens"]):
+        if not cache.alloc_seq(slot, ln):
+            raise RuntimeError(f"KV pool too small for slot {slot}")
+        cache.write_prompt(slot, kv(ln), kv(ln))
+    cache.free_seq(1)                       # retire + readmit: churn
+    if not cache.alloc_seq(1, sh["prompt_lens"][1] + 3):
+        raise RuntimeError("KV pool too small for readmitted slot 1")
+    cache.write_prompt(1, kv(sh["prompt_lens"][1] + 3),
+                       kv(sh["prompt_lens"][1] + 3))
+    return cache.decode_step_plan(list(range(len(sh["prompt_lens"]))))
+
+
+# workload -> (exact layer-plan builder, schedule builder, name prefix)
+_SYNTH = {
+    "moe": (lambda dtype, i, x: plan_ir.moe_layer_plan(
+                dtype=dtype, layer=i, x=x, **MOE_SHAPE),
+            lambda dtype, layers, stride: plan_ir.moe_schedule(
+                dtype=dtype, n_layers=layers, sample_stride=stride,
+                **MOE_SHAPE),
+            "M"),
+    "ssm": (lambda dtype, i, x: plan_ir.ssm_layer_plan(
+                dtype=dtype, layer=i, x=x, **SSM_SHAPE),
+            lambda dtype, layers, stride: plan_ir.ssm_schedule(
+                dtype=dtype, n_layers=layers, sample_stride=stride,
+                **SSM_SHAPE),
+            "S"),
+}
+
+
+def build_workload(workload: str, dtype: str, layers: int,
+                   sample_stride: int, exact: bool):
+    """Returns (plan-or-schedule, events_replayed, events_total).
+    ``workload`` is a workload class or a PAPER_MODELS name."""
+    if workload in WORKLOAD_MODELS or workload in PAPER_MODELS:
+        name = WORKLOAD_MODELS.get(workload, workload)
+        layers = layers or PAPER_MODELS[name].n_layers
+        if exact:
+            plan = model_stream_plan(name, layers, dtype)
+            return plan, len(plan.events), plan.n_exact_events
+        sched = model_stream_schedule(name, layers, dtype, sample_stride)
+        return sched, sched.sampled_events, sched.exact_events
+    if workload in _SYNTH:
+        mk_layer, mk_sched, prefix = _SYNTH[workload]
+        layers = layers or 2
+        if exact:
+            plan = plan_ir.concat(
+                [mk_layer(dtype, i,
+                          "x" if i == 0 else f"{prefix}{i-1}.out")
+                 for i in range(layers)], name=f"{workload}_x{layers}")
+            return plan, len(plan.events), plan.n_exact_events
+        sched = mk_sched(dtype, layers, sample_stride)
+        return sched, sched.sampled_events, sched.exact_events
+    assert workload == "decode", workload
+    plan = _decode_plan(dtype)
+    return plan, len(plan.events), plan.n_exact_events
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", choices=sorted(PAPER_MODELS),
                     help="composed transformer forward pass")
+    ap.add_argument("--workload", choices=WORKLOADS,
+                    help="workload class over the plan layer "
+                         "(steady-state sampled unless --exact)")
     ap.add_argument("--layers", type=int, default=None,
-                    help="cap the layer stack (default: full model)")
+                    help="cap the layer stack (default: full model / 2)")
     ap.add_argument("--gemm", type=int, nargs=3, metavar=("M", "N", "K"),
                     help="single Algorithm-1 GEMM instead of a model")
     ap.add_argument("--dtype", default="int8",
@@ -40,13 +137,36 @@ def main(argv=None) -> int:
                              "fp32"])
     ap.add_argument("--modes", nargs="+", default=["DM", "DC", "DevMem"],
                     choices=["DM", "DC", "DevMem"])
+    ap.add_argument("--sample-stride", type=int, default=1,
+                    help="additionally stride the GEMM inner loops of "
+                         "the sampled window")
+    ap.add_argument("--exact", action="store_true",
+                    help="replay the full composed event graph instead "
+                         "of the steady-state sample")
     ap.add_argument("--devmem-dram", default="HBM2",
                     help="DRAM tech for DevMem mode (paper Fig. 12)")
     args = ap.parse_args(argv)
-    if not args.model and not args.gemm:
-        ap.error("one of --model / --gemm is required")
+    if not args.model and not args.gemm and not args.workload:
+        ap.error("one of --model / --gemm / --workload is required")
     if args.layers is not None and args.layers < 1:
         ap.error("--layers must be >= 1")
+    if args.sample_stride < 1:
+        ap.error("--sample-stride must be >= 1")
+
+    plan = None
+    label = None
+    if args.model or args.workload:
+        wl = args.model or args.workload
+        plan, replayed, total_ev = build_workload(
+            wl, args.dtype, args.layers or 0, args.sample_stride,
+            args.exact)
+        label = f"{args.model} x{args.layers or PAPER_MODELS[args.model].n_layers}" \
+            if args.model else getattr(plan, "name", wl)
+    if plan is not None:
+        speedup = total_ev / max(replayed, 1)
+        kind = "exact" if args.exact else "sampled"
+        print(f"{label} ({kind}): events replayed={replayed} "
+              f"total={total_ev} ({speedup:.1f}x fewer)")
 
     for mode in args.modes:
         dram = DRAM(args.devmem_dram) if mode == "DevMem" else None
@@ -56,9 +176,8 @@ def main(argv=None) -> int:
             r = simulate_gemm(cfg, m, n, k)
             print(f"gemm{m}x{n}x{k} {args.dtype} {mode:7s} {_fmt(r)}")
         else:
-            r = run_transformer_composed(cfg, args.model, args.layers)
-            nl = args.layers or PAPER_MODELS[args.model].n_layers
-            print(f"{args.model} x{nl} {args.dtype} {mode:7s} {_fmt(r)}")
+            r = replay(cfg, plan)
+            print(f"{label} {args.dtype} {mode:7s} {_fmt(r)}")
     return 0
 
 

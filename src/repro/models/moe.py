@@ -23,6 +23,21 @@ from repro.models.params import PSpec
 from repro.sharding.context import shard
 
 
+def routed_capacity(n_assignments: int, n_experts: int,
+                    capacity: int | None,
+                    capacity_factor: float = 1.25,
+                    multiple: int = 8) -> int:
+    """Per-expert buffer capacity C for ``n_assignments`` (= tokens x
+    top_k) routed slots: capacity-factor sized (or explicit), rounded up
+    to ``multiple`` and clamped to the assignment count.  The single
+    source of the capacity rule — shared by both dispatch paths here and
+    by ``core.plan.moe_layer_plan``, so plan page sets match the model's
+    routed buffers exactly."""
+    C = capacity if capacity is not None else \
+        max(int(n_assignments / n_experts * capacity_factor), multiple)
+    return min(-(-C // multiple) * multiple, n_assignments)
+
+
 def moe_pspecs(cfg: ModelConfig):
     m, d, f = cfg.moe, cfg.d_model, cfg.moe.d_ff_expert
     E = m.n_routed_experts
@@ -85,11 +100,7 @@ def apply_moe(p, x, cfg: ModelConfig, capacity_factor: float = 1.25,
     counts = jnp.bincount(flat_e, length=E)
     starts = jnp.cumsum(counts) - counts
     pos_in_e = jnp.arange(n * k) - starts[e_sorted]
-    if capacity is not None:
-        C = capacity
-    else:
-        C = max(int(n * k / E * capacity_factor), 8)
-    C = min(-(-C // 8) * 8, n * k)
+    C = routed_capacity(n * k, E, capacity, capacity_factor)
     keep = pos_in_e < C
 
     # dispatch: (E, C, d)
@@ -150,11 +161,7 @@ def _apply_moe_local(p, x, cfg: ModelConfig, capacity_factor: float,
     starts = jnp.cumsum(counts, -1) - counts                  # (B, E)
     pos_in_e = jnp.arange(nk)[None] - jnp.take_along_axis(
         starts, e_sorted, -1)
-    if capacity is not None:
-        C = capacity
-    else:
-        C = max(int(nk / E * capacity_factor), 4)
-    C = min(-(-C // 4) * 4, nk)
+    C = routed_capacity(nk, E, capacity, capacity_factor, multiple=4)
     keep = pos_in_e < C
 
     bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, nk))

@@ -104,6 +104,27 @@ def chunked_linear_attention(r, k, v, logw, state, u=None,
     return out.astype(v.dtype), state
 
 
+def scan_chunk_2d(r, k, v, logw, state, H, N, inclusive=True, u=None):
+    """One scan chunk over 2D operands — the adapter the StreamPlan
+    executor's ``ssm_scan`` host op uses (``core.plan.ssm_layer_plan``).
+
+    r, k, logw: (L, H*N); v: (L, H*M); state: (H*N, M).  Runs the SAME
+    ``chunked_linear_attention`` kernel as the model forward (one chunk,
+    batch 1), so plan execution and the model reference agree by
+    construction.  Returns (out (L, H*M), new state (H*N, M)), fp32.
+    """
+    L = r.shape[0]
+    M = v.shape[1] // H
+    r4 = jnp.asarray(r, jnp.float32).reshape(1, L, H, N)
+    k4 = jnp.asarray(k, jnp.float32).reshape(1, L, H, N)
+    v4 = jnp.asarray(v, jnp.float32).reshape(1, L, H, M)
+    w4 = jnp.asarray(logw, jnp.float32).reshape(1, L, H, N)
+    s4 = jnp.asarray(state, jnp.float32).reshape(1, H, N, M)
+    out, s = chunked_linear_attention(r4, k4, v4, w4, s4, u=u,
+                                      chunk=L, inclusive=inclusive)
+    return out.reshape(L, H * M), s.reshape(H * N, M)
+
+
 def linear_attention_step(r, k, v, logw, state, u=None,
                           inclusive: bool = False):
     """Exact single-token recurrence. r,k,logw: (B,H,N); v: (B,H,M)."""

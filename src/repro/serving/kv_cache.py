@@ -17,6 +17,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _np_itemsize(dtype) -> int:
+    """Element size via numpy only — host bookkeeping (the "driver")
+    must never touch JAX.  ml_dtypes supplies the numpy-registered
+    bfloat16/fp8 types jax would otherwise resolve."""
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, str(dtype))).itemsize
+
+
 @dataclasses.dataclass
 class PagedCacheConfig:
     n_pages: int
@@ -29,7 +40,7 @@ class PagedCacheConfig:
     @property
     def page_bytes(self) -> int:
         return self.page_tokens * self.n_kv_heads * self.head_dim * \
-            jnp.dtype(self.dtype).itemsize
+            _np_itemsize(self.dtype)
 
 
 class PagedKVCache:
@@ -123,6 +134,30 @@ class PagedKVCache:
         for s in slots:
             if self.active[s]:
                 self.lens[s] += 1
+
+    # ------------------------------------------------------- streaming
+    def decode_step_plan(self, slots, out: str = "decode_out"):
+        """StreamPlan for one batched decode step over these slots —
+        DMA_IN page ids taken verbatim from the live page tables, so
+        the plan's page traffic IS the pool traffic (driver-side only:
+        tables / lens / held, never the jax pools)."""
+        from repro.core import plan as plan_ir
+        tables = [self.tables[s, :int(self.held[s])]
+                  if self.active[s] else [] for s in slots]
+        lens = [int(self.lens[s]) if self.active[s] else 0
+                for s in slots]
+        return plan_ir.decode_step_plan(
+            tables, lens, self.cfg.page_tokens, self.cfg.n_kv_heads,
+            self.cfg.head_dim, _np_itemsize(self.cfg.dtype), out=out)
+
+    def page_dicts(self, slots):
+        """{page_id: page} views of the K and V pools for the pages the
+        given slots hold — the ``paged`` input of ``execute_plan``."""
+        pids = sorted({int(p) for s in slots if self.active[s]
+                       for p in self.tables[s, :int(self.held[s])]})
+        k = {p: np.asarray(self.k_pages[p]) for p in pids}
+        v = {p: np.asarray(self.v_pages[p]) for p in pids}
+        return k, v
 
     # ---------------------------------------------------------- reads
     def device_views(self, slots: np.ndarray):

@@ -1,0 +1,275 @@
+"""Workload-graph plans: MoE expert routing, SSM scan chains, paged-KV
+decode steps, and steady-state sampling of composed plans.
+
+The invariants here are the PR's acceptance criteria: per-expert page
+accounting matches routed-token pages under capacity, every new plan
+class validates and matches its model-reference numerics, decode-plan
+page traffic equals the live paged-KV pool traffic, and a sampled
+composed replay agrees with the exact replay while walking an order of
+magnitude fewer events.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import paging
+from repro.core import plan as P
+from repro.core import streaming
+from repro.core.modes import MemoryMode
+
+
+# ----------------------------------------------------------------- MoE
+def _moe_setup(n=16, d=32, E=4, k=2, f=64, capacity=16, seed=0):
+    rng = np.random.default_rng(seed)
+    plan = P.moe_layer_plan(n, d, E, k, f, np.float32, capacity=capacity)
+    x = rng.standard_normal((n, d)).astype(np.float32) * 0.5
+    router = rng.standard_normal((d, E)).astype(np.float32) / np.sqrt(d)
+    wg = rng.standard_normal((E, d, f)).astype(np.float32) / np.sqrt(d)
+    wu = rng.standard_normal((E, d, f)).astype(np.float32) / np.sqrt(d)
+    wo = rng.standard_normal((E, f, d)).astype(np.float32) / np.sqrt(f)
+    tensors = {"M0.router": router}
+    for e in range(E):
+        tensors[f"M0.e{e}.wg"] = wg[e]
+        tensors[f"M0.e{e}.wu"] = wu[e]
+        tensors[f"M0.e{e}.wo"] = wo[e]
+    return plan, x, tensors, (router, wg, wu, wo)
+
+
+def test_moe_plan_matches_apply_moe_reference():
+    """Functional execution of the expert-routed plan == the model's
+    grouped-GEMM dispatch (lossless capacity)."""
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models.moe import apply_moe
+    n, d, E, k, f, C = 16, 32, 4, 2, 64, 16
+    plan, x, tensors, (router, wg, wu, wo) = _moe_setup(n, d, E, k, f, C)
+    plan.validate()
+    outs, _ = streaming.execute_plan(plan, {"x": x, **tensors},
+                                     MemoryMode.DM)
+    cfg = ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=d, n_heads=4,
+        n_kv_heads=4, d_ff=f, vocab_size=64,
+        moe=MoEConfig(n_routed_experts=E, top_k=k, d_ff_expert=f))
+    p = {"router": jnp.asarray(router), "wi_gate": jnp.asarray(wg),
+         "wi_up": jnp.asarray(wu), "wo": jnp.asarray(wo)}
+    want, aux = apply_moe(p, jnp.asarray(x)[None], cfg, capacity=C)
+    np.testing.assert_allclose(outs["M0.out"], np.asarray(want)[0],
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) >= 0.0
+
+
+def test_moe_per_expert_page_accounting():
+    """Sum of the per-expert page sets == the pages of the E x C routed
+    token block — capacity sizes the page traffic, exactly as the
+    grouped-GEMM buffers size the activation traffic."""
+    from repro.models.moe import routed_capacity
+    n, d, E, k, f, cap = 16, 32, 4, 2, 64, 16
+    plan, _, _, _ = _moe_setup(n, d, E, k, f, cap)
+    C = routed_capacity(n * k, E, cap)
+    lay = paging.layout_for((C, d), plan.dtype, "A", plan.page_bytes)
+    expert_pages = sum(
+        plan._role_pages(plan.tensors[f"M0.e{e}.buf"], "A")
+        for e in range(E))
+    assert expert_pages == E * lay.n_pages
+    routed_lay = paging.layout_for((E * C, d), plan.dtype, "A",
+                                   plan.page_bytes)
+    assert expert_pages == routed_lay.n_pages     # C % 16 == 0 here
+    # every expert's buffer is streamed for its three FFN GEMMs: page
+    # loads per expert are identical (capacity-shaped, not data-shaped)
+    counts = plan.counts()["dma_in"]
+    loads = {e: counts[f"M0.e{e}.buf"] for e in range(E)}
+    assert len(set(loads.values())) == 1
+    assert all(v > 0 for v in loads.values())
+
+
+# ----------------------------------------------------------------- SSM
+def test_ssm_plan_matches_chunked_reference():
+    from repro.models.ssm import chunked_linear_attention
+    rng = np.random.default_rng(1)
+    T, d, H, chunk = 32, 64, 4, 16
+    N = d // H
+    plan = P.ssm_layer_plan(T, d, H, np.float32, chunk=chunk)
+    plan.validate()
+    x = rng.standard_normal((T, d)).astype(np.float32) * 0.3
+    w = {name: rng.standard_normal(s).astype(np.float32) / np.sqrt(s[0])
+         for name, s in P.ssm_layer_weights(d).items()}
+    logw = -np.abs(rng.standard_normal((T, d))).astype(np.float32) * 0.5
+    s0 = np.zeros((H * N, N), np.float32)
+    outs, _ = streaming.execute_plan(
+        plan, {"x": x, "S0.logw": logw, "S0.s0": s0, **w},
+        MemoryMode.DC)
+    r = jnp.asarray(x @ w["S0.wr"]).reshape(1, T, H, N)
+    k = jnp.asarray(x @ w["S0.wk"]).reshape(1, T, H, N)
+    v = jnp.asarray(x @ w["S0.wv"]).reshape(1, T, H, N)
+    lw = jnp.asarray(logw).reshape(1, T, H, N)
+    ref, _ = chunked_linear_attention(r, k, v, lw,
+                                      jnp.zeros((1, H, N, N)),
+                                      chunk=chunk, inclusive=True)
+    want = np.asarray(ref).reshape(T, d) @ w["S0.wo"]
+    np.testing.assert_allclose(outs["S0.out"], want, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_ssm_plan_has_scan_dependency_chain():
+    """Each scan chunk's COMPUTE depends (transitively through the
+    event order) on the previous chunk's carry state producer."""
+    plan = P.ssm_layer_plan(64, 32, 2, np.float32, chunk=16)
+    scans = [ev for ev in plan.events if ev.op == "ssm_scan"]
+    assert len(scans) == 4
+    for prev, cur in zip(scans, scans[1:]):
+        # the carry tensor names chain c0.s -> c1.s -> ...
+        assert prev.meta["outs"][1] in cur.meta["inputs"]
+        assert prev.eid < cur.eid and cur.deps
+
+
+# -------------------------------------------------------------- decode
+def _churned_cache(dtype="float32", seed=2):
+    from repro.serving.kv_cache import PagedCacheConfig, PagedKVCache
+    rng = np.random.default_rng(seed)
+    ccfg = PagedCacheConfig(n_pages=32, page_tokens=8, n_kv_heads=2,
+                            head_dim=16, max_pages_per_seq=4,
+                            dtype=dtype)
+    cache = PagedKVCache(ccfg, max_seqs=3)
+    mk = lambda t: jnp.asarray(
+        rng.standard_normal((t, 2, 16)), jnp.dtype(dtype))
+    for slot, ln in enumerate((20, 9, 17)):
+        assert cache.alloc_seq(slot, ln)
+        cache.write_prompt(slot, mk(ln), mk(ln))
+    # churn: appends cross page boundaries, one retire + readmit
+    cache.append_token(np.array([0, 1, 2]), mk(3).reshape(3, 2, 16),
+                       mk(3).reshape(3, 2, 16))
+    cache.free_seq(1)
+    assert cache.alloc_seq(1, 12)
+    cache.write_prompt(1, mk(12), mk(12))
+    return cache
+
+
+def test_decode_plan_page_ids_match_live_tables_after_churn():
+    cache = _churned_cache()
+    slots = [0, 1, 2]
+    plan = cache.decode_step_plan(slots)
+    plan.validate()
+    want = {int(p) for s in slots
+            for p in cache.tables[s, :int(cache.held[s])]}
+    for pool in ("k", "v"):
+        got = {ev.page[1] for ev in plan.events
+               if ev.kind is P.EventKind.DMA_IN and ev.page[0] == pool}
+        assert got == want
+        assert plan.tensors[pool].pages == len(want)
+    # DMA_IN bytes == paged-KV bytes actually resident for the batch
+    dma = sum(ev.nbytes for ev in plan.events
+              if ev.kind is P.EventKind.DMA_IN)
+    resident = 2 * sum(int(cache.held[s]) for s in slots) \
+        * cache.cfg.page_bytes
+    assert dma == resident
+
+
+def test_decode_plan_matches_paged_attention_reference():
+    cache = _churned_cache()
+    rng = np.random.default_rng(3)
+    slots = [0, 1, 2]
+    plan = cache.decode_step_plan(slots)
+    q = rng.standard_normal((3, 2 * 16)).astype(np.float32)
+    kd, vd = cache.page_dicts(slots)
+    outs, store = streaming.execute_plan(plan, {"q": q}, MemoryMode.DM,
+                                         paged={"k": kd, "v": vd})
+    out = outs["decode_out"].reshape(3, 2, 16)
+    for b, s in enumerate(slots):
+        L = int(cache.lens[s])
+        tbl = cache.tables[s, :int(cache.held[s])]
+        K = np.concatenate([np.asarray(cache.k_pages[p])
+                            for p in tbl])[:L].astype(np.float32)
+        V = np.concatenate([np.asarray(cache.v_pages[p])
+                            for p in tbl])[:L].astype(np.float32)
+        qb = q[b].reshape(2, 16)
+        sc = np.einsum("hd,thd->ht", qb, K) * (16 ** -0.5)
+        pr = np.exp(sc - sc.max(-1, keepdims=True))
+        pr /= pr.sum(-1, keepdims=True)
+        want = np.einsum("ht,thd->hd", pr, V)
+        np.testing.assert_allclose(out[b], want, rtol=1e-4, atol=1e-5)
+    # DM streams every resident page exactly once
+    assert store.stats.lookups == 2 * sum(int(cache.held[s])
+                                          for s in slots)
+
+
+def test_decode_plan_replays_with_fig2_buckets():
+    from repro.accesys.pipeline import replay
+    from repro.accesys.system import default_system
+    cache = _churned_cache()
+    plan = cache.decode_step_plan([0, 1, 2])
+    for mode in ("DM", "DC", "DevMem"):
+        r = replay(default_system(mode), plan)
+        assert r.total_s > 0 and r.compute_s > 0 and r.host_s > 0
+        assert all(v >= 0 for v in r.buckets().values())
+
+
+def test_page_bytes_is_numpy_only():
+    """PagedCacheConfig.page_bytes must resolve element sizes without
+    jnp (driver-side bookkeeping) — including for bfloat16."""
+    from repro.serving.kv_cache import PagedCacheConfig, _np_itemsize
+    assert _np_itemsize("float32") == 4
+    assert _np_itemsize("bfloat16") == 2
+    cfg = PagedCacheConfig(n_pages=4, page_tokens=8, n_kv_heads=2,
+                           head_dim=16, max_pages_per_seq=2,
+                           dtype="bfloat16")
+    assert cfg.page_bytes == 8 * 2 * 16 * 2
+
+
+# -------------------------------------------- steady-state sampling
+def test_model_schedule_counts_match_exact_plan():
+    sched = P.model_schedule(32, 64, 2, 256, 3, "int8")
+    exact = P.model_plan(32, 64, 2, 256, 3, "int8")
+    sched.validate()
+    assert sched.exact_events == len(exact.events)
+    assert sched.macs == exact.macs
+    assert sched.n_calls == exact.n_calls
+    assert sched.sampled_events * 3 == sched.exact_events
+
+
+def test_sampled_composed_bert_base_matches_exact_replay():
+    """THE sampling acceptance criterion: a composed BERT-Base replay
+    from the steady-state schedule matches the exact replay within 2%
+    while walking >= 10x fewer events."""
+    from repro.accesys.pipeline import replay
+    from repro.accesys.system import (default_system, model_stream_plan,
+                                      model_stream_schedule)
+    plan = model_stream_plan("bert-base")
+    sched = model_stream_schedule("bert-base")
+    assert plan.n_exact_events == sched.exact_events
+    assert len(plan.events) >= 10 * sched.sampled_events
+    for mode in ("DM", "DC"):
+        exact = replay(default_system(mode), plan)
+        samp = replay(default_system(mode), sched)
+        assert abs(samp.total_s - exact.total_s) / exact.total_s < 0.02,\
+            (mode, exact.total_s, samp.total_s)
+        assert abs(samp.host_s - exact.host_s) / exact.host_s < 0.02
+
+
+def test_strided_schedule_stays_close_and_cuts_more_events():
+    """Intra-GEMM striding on top of the layer window: fewer events
+    still, host time untouched, total within a few percent."""
+    from repro.accesys.pipeline import replay
+    from repro.accesys.system import default_system
+    base = P.model_schedule(128, 512, 8, 2048, 8, "int8")
+    strided = P.model_schedule(128, 512, 8, 2048, 8, "int8",
+                               sample_stride=3)
+    assert strided.sampled_events < base.sampled_events
+    r_base = replay(default_system("DC"), base)
+    r_str = replay(default_system("DC"), strided)
+    assert abs(r_str.total_s - r_base.total_s) / r_base.total_s < 0.05
+    assert r_str.host_s == pytest.approx(r_base.host_s, rel=1e-9)
+
+
+def test_moe_and_ssm_schedules_keep_host_time_unstrided():
+    """Striding the GEMM windows must not scale the host-op segments
+    (dispatch/combine/scan run in full either way)."""
+    from repro.accesys.pipeline import replay
+    from repro.accesys.system import default_system
+    for mk in (lambda s: P.moe_schedule(256, 256, 4, 2, 512, 4,
+                                        "int8", sample_stride=s),
+               lambda s: P.ssm_schedule(256, 256, 4, 4, "int8",
+                                        sample_stride=s)):
+        r1 = replay(default_system("DC"), mk(1))
+        r4 = replay(default_system("DC"), mk(4))
+        assert r4.host_s == pytest.approx(r1.host_s, rel=1e-9)
+        assert abs(r4.total_s - r1.total_s) / r1.total_s < 0.1
