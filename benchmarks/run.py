@@ -17,7 +17,9 @@ MODULES = [
     "bench_tlb",               # Table 8
     "bench_e2e_models",        # Table 9
     "bench_kernels",           # Eq. 1 + streaming attention (wall-clock)
-    "bench_serving",           # engine throughput (wall-clock)
+    "bench_serving",           # engine throughput + trace replay
+    "bench_replay",            # compiled-vs-event engines -> BENCH_replay.json
+    "bench_moe_sweep",         # exact MoE expert x capacity sweep
 ]
 
 

@@ -1,2 +1,3 @@
 from repro.accesys import components, pipeline, system, workloads  # noqa: F401
-from repro.accesys.pipeline import replay, simulate_gemm  # noqa: F401
+from repro.accesys.pipeline import (replay, replay_compiled,  # noqa: F401
+                                    simulate_gemm)

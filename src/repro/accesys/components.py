@@ -13,6 +13,127 @@ import collections
 import dataclasses
 import math
 
+import numpy as np
+
+
+# ---------------------------------------------------- batch LRU machinery
+def prev_occurrence(ids: np.ndarray) -> np.ndarray:
+    """``prev[i]`` = index of the previous access to ``ids[i]`` in the
+    trace (-1 for a first access).  Vectorized: a stable argsort groups
+    equal ids in access order, so each access's predecessor is its left
+    neighbour within its group."""
+    n = int(ids.size)
+    prev = np.full(n, -1, np.int64)
+    if n == 0:
+        return prev
+    order = np.argsort(ids, kind="stable")
+    si = ids[order]
+    same = si[1:] == si[:-1]
+    prev[order[1:][same]] = order[:-1][same]
+    return prev
+
+
+def lru_stack_distances(prev: np.ndarray) -> np.ndarray:
+    """Exact LRU stack distance of every access, in one vectorized
+    divide-and-conquer pass over the trace.
+
+    ``sd[i]`` = number of DISTINCT ids touched strictly between access
+    ``i`` and the previous access to the same id (``n`` — effectively
+    infinite — for first accesses).  A move-to-front LRU of capacity C
+    hits access ``i`` iff ``prev[i] >= 0 and sd[i] < C``, so this one
+    trace-intrinsic pass prices every cache in the hierarchy (uTLB,
+    L2 TLB, LLC) at once.
+
+    Method: an access ``j`` is the first in-window touch of its id iff
+    its own previous access predates the window, so
+    ``sd[i] = #{j in (prev[i], i) : prev[j] <= prev[i]}``.  That count
+    is accumulated by merge-sort D&C over ``prev``: at each level every
+    still-active access sitting in the right half of its pair-block
+    ranks, via one global ``searchsorted`` into the block-sorted left
+    halves, the in-window ``j`` it gains from the left half.  The level
+    at which the window start enters the block is an access's last
+    contribution (the ``j <= prev[i]`` overcount is subtracted in
+    closed form — every such ``j`` satisfies ``prev[j] < j``), so the
+    active set shrinks as reuse distances resolve and the sweep stops
+    as soon as none remain.
+    """
+    n = int(prev.size)
+    sd = np.full(n, n, np.int64)
+    if n == 0:
+        return sd
+    act = np.nonzero(prev >= 0)[0]
+    sd[act] = 0
+    if act.size == 0:
+        return sd
+    nbits = max(1, int(n - 1).bit_length())
+    size = 1 << nbits
+    big = np.int64(n + 2)
+    a = np.full(size, n + 1, np.int32)          # sort keys; pad = +inf
+    a[:n] = (prev + 1).astype(np.int32)
+    thr = prev[act] + 1
+    for lev in range(nbits):
+        block = np.int64(1 << lev)
+        pair = block << 1
+        on_right = (act & block) != 0
+        if np.any(on_right):
+            q = act[on_right]
+            pid = q >> (lev + 1)
+            if block <= 16:
+                # tiny left blocks: rank by direct gathered compares —
+                # cheaper than a global searchsorted at the dense levels
+                gath = a.reshape(-1, pair)[:, :block][pid]
+                cnt = (gath <= thr[on_right][:, None]).sum(
+                    axis=1, dtype=np.int64)
+            else:
+                left = a.reshape(-1, pair)[:, :block].astype(np.int64)
+                left += (np.arange(left.shape[0], dtype=np.int64)
+                         * big)[:, None]
+                cnt = np.searchsorted(left.ravel(),
+                                      pid * big + thr[on_right],
+                                      side="right") - pid * block
+            pstart = q & ~(pair - 1)
+            pq = prev[q]
+            crossed = pq >= pstart
+            cnt[crossed] -= pq[crossed] - pstart[crossed] + 1
+            sd[q] += cnt
+            live = ~crossed
+            act = np.concatenate([act[~on_right], q[live]])
+            thr = np.concatenate([thr[~on_right], thr[on_right][live]])
+            if act.size == 0:
+                break                            # all reuses resolved
+        a = np.sort(a.reshape(-1, int(pair)), axis=1,
+                    kind="stable").ravel()
+    return sd
+
+
+def _lru_trace_memo(memo, ids):
+    """Trace-intrinsic (parameter-independent) prev/stack-distance
+    arrays, cached in ``memo`` across replays of the same trace."""
+    if "prev" not in memo:
+        memo["prev"] = prev_occurrence(ids)
+        memo["sd"] = lru_stack_distances(memo["prev"])
+    return memo["prev"], memo["sd"]
+
+
+def _mru_ids(memo, key, ids):
+    """Distinct ids of a trace ordered oldest-to-newest by last touch —
+    trace-intrinsic, so cached in ``memo`` like the stack distances."""
+    if key not in memo:
+        uniq, ridx = np.unique(ids[::-1], return_index=True)
+        memo[key] = uniq[np.argsort(ids.size - 1 - ridx)]
+    return memo[key]
+
+
+def _rebuild_lru_state(od, mru, keys, cap):
+    """Reconstruct the OrderedDict an equivalent sequential sweep would
+    leave behind: the ``cap`` most-recently-used distinct ids, oldest
+    first."""
+    od.clear()
+    if keys is None:
+        return
+    for pid in mru[-cap:].tolist():
+        od[keys[pid]] = True
+
 # ----------------------------------------------------------------- SA
 # Table 6 (post-synthesis PPA; fixed-point @1 GHz, floating @0.6 GHz)
 SA_VARIANTS = {
@@ -176,6 +297,56 @@ class SMMU:
         return (self.hit_cycles + self.l2_fill_cycles +
                 self.walk_cycles(footprint_pages)) / self.freq
 
+    # ------------------------------------------------------ batch path
+    def tlb_walk_masks(self, ids: np.ndarray, memo: dict):
+        """(uTLB-miss mask over the trace, walk mask over the uTLB-miss
+        subsequence) — the exact hit/miss sequence a sequential sweep
+        from reset state would produce, computed from the trace's stack
+        distances.  ``memo`` caches the trace-intrinsic arrays; only
+        the capacity comparisons depend on this SMMU's parameters."""
+        prev, sd = _lru_trace_memo(memo, ids)
+        tlb_miss = ~((prev >= 0) & (sd < self.tlb_entries))
+        key = ("l2", self.tlb_entries)
+        if key not in memo:
+            miss_pos = np.nonzero(tlb_miss)[0]
+            sub_prev = prev_occurrence(ids[miss_pos])
+            memo[key] = (miss_pos, sub_prev,
+                         lru_stack_distances(sub_prev))
+        miss_pos, sub_prev, sub_sd = memo[key]
+        walk_sub = ~((sub_prev >= 0) & (sub_sd < self.l2_entries))
+        return tlb_miss, miss_pos, walk_sub
+
+    def access_many(self, ids: np.ndarray, footprint_pages: int,
+                    memo: dict, keys=None) -> np.ndarray:
+        """Batch counterpart of ``access`` over a whole interned page-id
+        trace: per-access translation seconds, identical to a sequential
+        sweep from reset state (counters updated; final LRU state
+        reconstructed when ``keys`` maps ids back to page keys)."""
+        assert not self._tlb and not self._l2, \
+            "access_many requires reset SMMU state"
+        tlb_miss, miss_pos, walk_sub = self.tlb_walk_masks(ids, memo)
+        self.lookups += int(ids.size)
+        self.misses += int(miss_pos.size)
+        self.walks += int(walk_sub.sum())
+        # one cached per-access time array, replaced when the SMMU
+        # parameters change — mode sweeps over one config reuse it,
+        # parameter sweeps do not accumulate one array per config
+        tkey = (self.tlb_entries, self.l2_entries, self.hit_cycles,
+                self.l2_fill_cycles, self.freq,
+                self.walk_cycles(footprint_pages))
+        if memo.get("xlat", (None,))[0] != tkey:
+            cyc = np.full(ids.size, float(self.hit_cycles))
+            cyc[miss_pos] += self.l2_fill_cycles
+            cyc[miss_pos[walk_sub]] += self.walk_cycles(footprint_pages)
+            memo["xlat"] = (tkey, cyc / self.freq)
+        _rebuild_lru_state(self._tlb, _mru_ids(memo, "mru", ids), keys,
+                           self.tlb_entries)
+        _rebuild_lru_state(self._l2,
+                           _mru_ids(memo, ("mru_l2", self.tlb_entries),
+                                    ids[miss_pos]),
+                           keys, self.l2_entries)
+        return memo["xlat"][1]
+
 
 # ---------------------------------------------------------------- DMA
 @dataclasses.dataclass(frozen=True)
@@ -227,3 +398,20 @@ class LLC:
 
     def hit_time(self, nbytes: int) -> float:
         return self.hit_latency_ns * 1e-9 + nbytes / self.hit_bw
+
+    # ------------------------------------------------------ batch path
+    def access_many(self, ids: np.ndarray, memo: dict,
+                    keys=None) -> np.ndarray:
+        """Batch counterpart of ``access``: the exact hit mask of a
+        sequential sweep from reset state, from the same trace-intrinsic
+        stack distances the SMMU pass uses (one ``memo`` per trace
+        serves the whole component hierarchy)."""
+        assert not self._lru, "access_many requires reset LLC state"
+        prev, sd = _lru_trace_memo(memo, ids)
+        hit = (prev >= 0) & (sd < self.capacity_pages)
+        nh = int(hit.sum())
+        self.hits += nh
+        self.misses += int(ids.size) - nh
+        _rebuild_lru_state(self._lru, _mru_ids(memo, "mru", ids), keys,
+                           self.capacity_pages)
+        return hit

@@ -12,6 +12,7 @@ comparison systems simulated by their own authors; Table 9 cites them).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional
 
@@ -154,18 +155,24 @@ def run_transformer_cpu(wl: W.Workload, cpu: Optional[CPUModel] = None,
 
 
 # -------------------------------------------- composed StreamPlan path
+# maxsize stays small: an exact full-depth graph plus its compiled
+# arrays is order-100 MB, and sweeps only ever reuse the last few
+@functools.lru_cache(maxsize=4)
 def model_stream_plan(name: str, n_layers: Optional[int] = None,
                       dtype: str = "int8") -> "plan_ir.StreamPlan":
     """The full event-graph plan for a paper model (BERT/ViT class):
     N composed transformer-layer plans.  ``n_layers`` caps the stack
     (the graph is exact, not sampled — BERT-Base at full depth is a few
-    hundred thousand events)."""
+    hundred thousand events).  Memoized: building the graph costs far
+    more than compiled-replaying it, and mode sweeps reuse one plan
+    (and its compiled form) across DM/DC/DevMem rows."""
     cfg = PAPER_MODELS[name]
     layers = cfg.n_layers if n_layers is None else n_layers
     return plan_ir.model_plan(cfg.max_train_seq, cfg.d_model,
                               cfg.n_heads, cfg.d_ff, layers, dtype)
 
 
+@functools.lru_cache(maxsize=16)
 def model_stream_schedule(name: str, n_layers: Optional[int] = None,
                           dtype: str = "int8",
                           sample_stride: int = 1
@@ -173,7 +180,8 @@ def model_stream_schedule(name: str, n_layers: Optional[int] = None,
     """Steady-state-sampled counterpart of ``model_stream_plan``: one
     layer's sub-plans as segments, each repeated ``n_layers`` times —
     the replayer walks one layer's events and scales, instead of
-    replaying hundreds of thousands of events exactly."""
+    replaying hundreds of thousands of events exactly.  Memoized like
+    ``model_stream_plan``."""
     cfg = PAPER_MODELS[name]
     layers = cfg.n_layers if n_layers is None else n_layers
     return plan_ir.model_schedule(cfg.max_train_seq, cfg.d_model,
@@ -185,12 +193,16 @@ def run_transformer_composed(cfg: SystemConfig, name: str,
                              n_layers: Optional[int] = None,
                              cpu: Optional[CPUModel] = None,
                              sampled: bool = False,
-                             sample_stride: int = 1) -> GemmResult:
+                             sample_stride: int = 1,
+                             engine: Optional[str] = None) -> GemmResult:
     """End-to-end replay of a composed multi-layer transformer plan —
     one event timeline across QKV / per-head attention / FFN instead of
     per-GEMM-class aggregation.  Returns the Fig.-2 buckets for the
     whole forward pass.  ``sampled=True`` replays the steady-state
-    schedule (one layer window x repeat) instead of the exact graph."""
+    schedule (one layer window x repeat) instead of the exact graph;
+    ``engine`` picks the replayer (compiled array engine by default for
+    composed plans — exact full-depth replays are no longer the slow
+    path)."""
     cpu = cpu or CPUModel()
     if sampled:
         plan = model_stream_schedule(name, n_layers, cfg.sa.dtype,
@@ -198,7 +210,8 @@ def run_transformer_composed(cfg: SystemConfig, name: str,
     else:
         plan = model_stream_plan(name, n_layers, cfg.sa.dtype)
     return replay(cfg, plan,
-                  host_s_per_elem=cpu.nongemm_cycles_per_elem / cpu.freq)
+                  host_s_per_elem=cpu.nongemm_cycles_per_elem / cpu.freq,
+                  engine=engine)
 
 
 # ----------------------------------------------------- config presets

@@ -19,10 +19,18 @@ repeat count; ``--sample-stride`` additionally strides the GEMM inner
 loops); ``--exact`` materializes and replays the full composed event
 graph.  The events-replayed vs events-total line makes the sampling
 speedup visible.
+
+``--engine`` selects the replayer: the compiled array engine (the
+default for anything non-trivial) or the event loop; ``--engine both``
+runs the two and asserts they agree to float tolerance — the parity
+check CI runs per workload class.  Each mode row reports the replay
+wall-clock and events/sec, so the compiled engine's speedup is
+measured, not asserted.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 from repro.accesys.components import DRAM
 from repro.accesys.pipeline import replay, simulate_gemm
@@ -143,6 +151,10 @@ def main(argv=None) -> int:
     ap.add_argument("--exact", action="store_true",
                     help="replay the full composed event graph instead "
                          "of the steady-state sample")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "event", "compiled", "both"],
+                    help="replayer: compiled array engine vs Python "
+                         "event loop ('both' checks parity)")
     ap.add_argument("--devmem-dram", default="HBM2",
                     help="DRAM tech for DevMem mode (paper Fig. 12)")
     args = ap.parse_args(argv)
@@ -171,13 +183,43 @@ def main(argv=None) -> int:
     for mode in args.modes:
         dram = DRAM(args.devmem_dram) if mode == "DevMem" else None
         cfg = default_system(mode, dtype=args.dtype, dram=dram)
+        engines = ["compiled", "event"] if args.engine == "both" \
+            else [args.engine]
+        results = {}
+        gname = None
         if args.gemm:
             m, n, k = args.gemm
-            r = simulate_gemm(cfg, m, n, k)
-            print(f"gemm{m}x{n}x{k} {args.dtype} {mode:7s} {_fmt(r)}")
+            gname = f"gemm{m}x{n}x{k}"
+            for eng in engines:
+                t0 = time.perf_counter()
+                results[eng] = simulate_gemm(
+                    cfg, m, n, k, engine=None if eng == "auto" else eng)
+                wall = time.perf_counter() - t0
+                print(f"{gname} {args.dtype} {mode:7s} "
+                      f"{_fmt(results[eng])}  "
+                      f"[{eng}: wall={wall*1e3:.1f}ms]")
         else:
-            r = replay(cfg, plan)
-            print(f"{label} {args.dtype} {mode:7s} {_fmt(r)}")
+            for eng in engines:
+                t0 = time.perf_counter()
+                results[eng] = replay(cfg, plan, engine=eng)
+                wall = time.perf_counter() - t0
+                print(f"{label} {args.dtype} {mode:7s} "
+                      f"{_fmt(results[eng])}  "
+                      f"[{eng}: wall={wall*1e3:.1f}ms "
+                      f"{replayed/max(wall, 1e-9):,.0f} ev/s]")
+        if args.engine == "both":
+            a, b = results["compiled"], results["event"]
+            import dataclasses as _dc
+            for f in _dc.fields(a):
+                va, vb = getattr(a, f.name), getattr(b, f.name)
+                if not (va == vb or (isinstance(va, float) and
+                                     abs(va - vb) <= 1e-9 *
+                                     max(abs(vb), 1e-30))):
+                    raise SystemExit(
+                        f"engine parity violated: {f.name} "
+                        f"compiled={va!r} event={vb!r}")
+            print(f"{gname or label} {mode}: compiled == event "
+                  f"(all GemmResult fields, rtol<=1e-9)")
     return 0
 
 

@@ -46,8 +46,17 @@ class EngineStats:
 
 
 class ServingEngine:
+    """``record_plans=True`` shadows the dense decode cache with a
+    driver-side ``PageTable`` (no device pools) and records one
+    ``decode_step_plan`` per engine step — page ids and valid lengths
+    track the REAL batch composition (admissions, retirements, page
+    churn) over the run, so the accesys replayer can price a whole
+    serving trace after the fact (``step_plans``)."""
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_seq: int = 256, eos_token: Optional[int] = None):
+                 max_seq: int = 256, eos_token: Optional[int] = None,
+                 record_plans: bool = False, kv_page_tokens: int = 8,
+                 kv_dtype: str = "float16"):
         self.cfg = cfg
         self.model = Model(cfg, remat="none")
         self.params = params
@@ -60,6 +69,21 @@ class ServingEngine:
         self.stats = EngineStats()
         self._next_tokens = np.zeros((slots,), np.int32)
         self._remaining = np.zeros((slots,), np.int32)
+        self.step_plans: list = []
+        self._table = None
+        if record_plans:
+            from repro.serving.kv_cache import (PagedCacheConfig,
+                                                PageTable)
+            pages_per_seq = -(-max_seq // kv_page_tokens)
+            self._table = PageTable(
+                PagedCacheConfig(
+                    n_pages=slots * pages_per_seq,
+                    page_tokens=kv_page_tokens,
+                    n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.resolved_head_dim,
+                    max_pages_per_seq=pages_per_seq,
+                    dtype=kv_dtype),
+                max_seqs=slots)
 
         self._decode = jax.jit(self.model.decode_step)
         self._prefill1 = jax.jit(
@@ -94,12 +118,19 @@ class ServingEngine:
             self._remaining[slot] = req.max_new_tokens - 1
             self.slot_req[slot] = req
             self.stats.tokens_out += 1
+            if self._table is not None:
+                if not self._table.alloc_seq(slot, len(req.prompt)) \
+                        or not self._table.note_tokens(
+                            slot, int(self.cache["len"][slot])):
+                    raise RuntimeError("shadow KV table out of pages")
 
     def _retire(self, slot: int):
         req = self.slot_req[slot]
         req.done_s = time.perf_counter()
         self.slot_req[slot] = None
         self.cache["len"] = self.cache["len"].at[slot].set(0)
+        if self._table is not None:
+            self._table.free_seq(slot)
 
     def step(self):
         """One engine iteration: admit + one batched decode step."""
@@ -107,9 +138,18 @@ class ServingEngine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return False
+        if self._table is not None:
+            # the step streams each active slot's currently-resident KV
+            # pages; the new token's KV lands before the next step
+            self.step_plans.append(self._table.decode_step_plan(active))
         toks = jnp.asarray(self._next_tokens)
         self.cache, logits = self._decode(self.params, self.cache, toks)
         self.stats.decode_steps += 1
+        if self._table is not None:
+            for slot in active:
+                if not self._table.note_tokens(
+                        slot, int(self.cache["len"][slot])):
+                    raise RuntimeError("shadow KV table out of pages")
         nxt = np.asarray(jnp.argmax(
             logits[:, :self.cfg.vocab_size], axis=-1), np.int32)
         for slot in active:

@@ -43,17 +43,17 @@ class PagedCacheConfig:
             _np_itemsize(self.dtype)
 
 
-class PagedKVCache:
-    """One layer's paged K/V pool + page tables for up to S sequences."""
+class PageTable:
+    """Host-side paged-KV bookkeeping alone — the "driver" half of the
+    cache: free-list, per-sequence page tables and lengths, and the
+    ``decode_step_plan`` builder.  Holds NO device pools (and never
+    imports JAX state), so the serving engine can shadow its dense
+    cache with one of these to emit a StreamPlan per decode step at
+    bookkeeping cost."""
 
     def __init__(self, cfg: PagedCacheConfig, max_seqs: int):
         self.cfg = cfg
         self.max_seqs = max_seqs
-        shape = (cfg.n_pages, cfg.page_tokens, cfg.n_kv_heads,
-                 cfg.head_dim)
-        self.k_pages = jnp.zeros(shape, jnp.dtype(cfg.dtype))
-        self.v_pages = jnp.zeros(shape, jnp.dtype(cfg.dtype))
-        # host-side bookkeeping (the "driver")
         self._free = list(range(cfg.n_pages - 1, -1, -1))
         self.tables = np.zeros((max_seqs, cfg.max_pages_per_seq), np.int32)
         self.lens = np.zeros((max_seqs,), np.int32)
@@ -94,6 +94,47 @@ class PagedKVCache:
             have += 1
         self.held[slot] = have
         return True
+
+    def note_tokens(self, slot: int, new_len: int) -> bool:
+        """Record that ``slot`` now caches ``new_len`` tokens (growing
+        its table across page boundaries as needed) — the data-free
+        counterpart of ``write_prompt`` / ``append_token`` for shadow
+        tables that only track composition."""
+        if not self.ensure_capacity(slot, new_len):
+            return False
+        self.lens[slot] = new_len
+        return True
+
+    # ------------------------------------------------------- streaming
+    def decode_step_plan(self, slots, out: str = "decode_out"):
+        """StreamPlan for one batched decode step over these slots —
+        DMA_IN page ids taken verbatim from the live page tables, so
+        the plan's page traffic IS the pool traffic (driver-side only:
+        tables / lens / held, never any device pool)."""
+        from repro.core import plan as plan_ir
+        tables = [self.tables[s, :int(self.held[s])]
+                  if self.active[s] else [] for s in slots]
+        lens = [int(self.lens[s]) if self.active[s] else 0
+                for s in slots]
+        return plan_ir.decode_step_plan(
+            tables, lens, self.cfg.page_tokens, self.cfg.n_kv_heads,
+            self.cfg.head_dim, _np_itemsize(self.cfg.dtype), out=out)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.cfg.n_pages - len(self._free)
+
+
+class PagedKVCache(PageTable):
+    """One layer's paged K/V pool + page tables for up to S sequences:
+    the ``PageTable`` driver state plus the device-resident pools."""
+
+    def __init__(self, cfg: PagedCacheConfig, max_seqs: int):
+        super().__init__(cfg, max_seqs)
+        shape = (cfg.n_pages, cfg.page_tokens, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self.k_pages = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        self.v_pages = jnp.zeros(shape, jnp.dtype(cfg.dtype))
 
     # --------------------------------------------------------- writes
     def write_prompt(self, slot: int, k: jnp.ndarray, v: jnp.ndarray):
@@ -136,20 +177,6 @@ class PagedKVCache:
                 self.lens[s] += 1
 
     # ------------------------------------------------------- streaming
-    def decode_step_plan(self, slots, out: str = "decode_out"):
-        """StreamPlan for one batched decode step over these slots —
-        DMA_IN page ids taken verbatim from the live page tables, so
-        the plan's page traffic IS the pool traffic (driver-side only:
-        tables / lens / held, never the jax pools)."""
-        from repro.core import plan as plan_ir
-        tables = [self.tables[s, :int(self.held[s])]
-                  if self.active[s] else [] for s in slots]
-        lens = [int(self.lens[s]) if self.active[s] else 0
-                for s in slots]
-        return plan_ir.decode_step_plan(
-            tables, lens, self.cfg.page_tokens, self.cfg.n_kv_heads,
-            self.cfg.head_dim, _np_itemsize(self.cfg.dtype), out=out)
-
     def page_dicts(self, slots):
         """{page_id: page} views of the K and V pools for the pages the
         given slots hold — the ``paged`` input of ``execute_plan``."""
@@ -164,7 +191,3 @@ class PagedKVCache:
         table = jnp.asarray(self.tables[slots])
         lens = jnp.asarray(self.lens[slots])
         return self.k_pages, self.v_pages, table, lens
-
-    @property
-    def pages_in_use(self) -> int:
-        return self.cfg.n_pages - len(self._free)
