@@ -1,13 +1,11 @@
 """Measured serving throughput of the continuous-batching engine on a
-reduced model (real wall-clock on this host), plus plan-timed decode
-steps over a live paged KV cache across DM/DC/DevMem (simulated accesys
-latency — the paper's SMMU/page-table design applied to serving).
-
-The trace rows replay a FULL engine run: ``record_plans=True`` makes
-the engine emit one ``decode_step_plan`` per step (page ids from a
-shadow PageTable tracking the real batch composition), and the compiled
-replay engine prices the whole multi-hundred-step trace per memory mode
-in seconds."""
+reduced model (real wall-clock on this host), plus the request-centric
+serving simulation: the engine records a plan trace — one prefill plan
+per admission and one multi-layer GQA decode plan per step — and ONE
+batched compiled replay prices the whole 200+-step trace per memory
+mode (shared page interning, one continuous timeline; no per-step
+Python loop over plans), emitting simulated TTFT/TPOT p50/p95/p99
+attributed to individual requests."""
 import time
 
 import jax
@@ -22,7 +20,11 @@ from repro.core.plan import EventKind
 from repro.models.model import Model
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.kv_cache import PagedCacheConfig, PagedKVCache
+from repro.serving.sim_report import (simulate_serving_trace,
+                                      trace_schedule)
 from benchmarks.common import emit
+
+MODES = (("DM", None), ("DC", None), ("DevMem", "HBM2"))
 
 
 def decode_plan_rows():
@@ -42,9 +44,10 @@ def decode_plan_rows():
     dma_bytes = sum(ev.nbytes for ev in plan.events
                     if ev.kind is EventKind.DMA_IN)
     rows = []
-    for mode, dram in (("DM", None), ("DC", None),
-                       ("DevMem", DRAM("HBM2"))):
-        r = replay(default_system(mode, dtype="fp16", dram=dram), plan)
+    for mode, dram in MODES:
+        r = replay(default_system(mode, dtype="fp16",
+                                  dram=DRAM(dram) if dram else None),
+                   plan)
         rows.append((f"decode_plan.{mode}", round(r.total_s * 1e6, 2),
                      f"kv_bytes={dma_bytes};"
                      f"pages={cache.pages_in_use};"
@@ -53,10 +56,11 @@ def decode_plan_rows():
 
 
 def engine_trace_rows(cfg, params):
-    """Replay a >=200-step engine trace per memory mode: the engine
-    records one decode plan per step; the compiled replayer prices the
-    whole trace (real admissions / retirements / page churn) per mode
-    in seconds of wall-clock."""
+    """Replay a >=200-step engine trace per memory mode as ONE batched
+    compiled replay: the engine records one prefill plan per admission
+    and one multi-layer GQA decode plan per step; per mode the whole
+    trace is priced on one continuous timeline and the per-request
+    TTFT/TPOT percentiles are read off it."""
     rng = np.random.default_rng(1)
     eng = ServingEngine(cfg, params, slots=4, max_seq=96,
                         record_plans=True)
@@ -67,22 +71,40 @@ def engine_trace_rows(cfg, params):
                                 ).astype(np.int32),
             max_new_tokens=32))
     eng.run_until_drained(max_steps=2000)
-    plans = eng.step_plans
-    if len(plans) < 200:
-        raise RuntimeError(f"trace too short: {len(plans)} steps")
+    trace = eng.trace
+    decode_steps = sum(1 for r in trace if r.kind == "decode")
+    prefills = len(trace) - decode_steps
+    if decode_steps < 200:
+        raise RuntimeError(f"trace too short: {decode_steps} steps")
+    sched = trace_schedule(trace)       # one compile, shared per mode
     rows = []
-    for mode, dram in (("DM", None), ("DC", None),
-                       ("DevMem", DRAM("HBM2"))):
-        sys_cfg = default_system(mode, dtype="fp16", dram=dram)
+    for mode, dram in MODES:
+        sys_cfg = default_system(mode, dtype="fp16",
+                                 dram=DRAM(dram) if dram else None)
         t0 = time.perf_counter()
-        sim_s = sum(replay(sys_cfg, p, engine="compiled").total_s
-                    for p in plans)
+        rep = simulate_serving_trace(sys_cfg, trace, sched=sched,
+                                     engine="compiled")
         wall = time.perf_counter() - t0
-        rows.append((f"trace_replay.{mode}", round(sim_s * 1e6, 1),
-                     f"steps={len(plans)};"
-                     f"events={sum(len(p.events) for p in plans)};"
+        pct = rep.percentiles()
+        decode_s = sum(s for s, r in zip(rep.per_event_s, trace)
+                       if r.kind == "decode")
+        rows.append((f"trace_replay.{mode}",
+                     round(rep.total_s * 1e6, 1),
+                     f"steps={decode_steps};prefills={prefills};"
+                     f"events={sched.sampled_events};"
                      f"replay_wall_s={wall:.2f};"
-                     f"sim_us_per_step={sim_s * 1e6 / len(plans):.2f}"))
+                     f"sim_us_per_decode_step="
+                     f"{decode_s * 1e6 / decode_steps:.2f};"
+                     f"prefill_share="
+                     f"{1 - decode_s / rep.total_s:.3f}"))
+        rows.append((f"serving_latency.{mode}",
+                     round(pct["ttft_p50_us"], 1),
+                     f"ttft_p95_us={pct['ttft_p95_us']:.1f};"
+                     f"ttft_p99_us={pct['ttft_p99_us']:.1f};"
+                     f"tpot_p50_us={pct['tpot_p50_us']:.2f};"
+                     f"tpot_p95_us={pct['tpot_p95_us']:.2f};"
+                     f"tpot_p99_us={pct['tpot_p99_us']:.2f};"
+                     f"requests={pct['requests']}"))
     return rows
 
 

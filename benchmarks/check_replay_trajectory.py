@@ -1,0 +1,87 @@
+"""CI wall-clock trajectory check for the compiled replay engine.
+
+Rebuilds the exact BERT-Base composed plan, runs the compiled replay
+across the DM/DC/DevMem sweep (the first mode pays the one-time trace
+analysis, exactly as ``bench_replay.py`` measures it), and compares
+the achieved events/sec against the committed ``BENCH_replay.json``
+artifact.  Exits non-zero if throughput regressed by more than the
+threshold (default 2x) — catching accidental de-vectorization of the
+replay hot path without pinning absolute machine speed:
+
+  * the committed events/sec is HOST-NORMALIZED before comparing —
+    the event engine (a pure-Python object loop whose speed tracks the
+    host, also recorded in the artifact) is re-measured on this
+    machine and its ratio to the artifact's scales the expectation, so
+    a CI runner 2x slower than the benchmark host does not fail the
+    gate, while a compiled-path-only regression still does;
+  * the compiled sweep is run twice (memo cleared in between, so both
+    are cold like the artifact's) and the best wall-clock kept — one
+    noisy neighbour doesn't flake the gate.
+
+    PYTHONPATH=src python benchmarks/check_replay_trajectory.py
+"""
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.accesys.components import DRAM
+from repro.accesys.pipeline import replay
+from repro.accesys.system import default_system, model_stream_plan
+
+ARTIFACT = Path(__file__).resolve().parent.parent / "BENCH_replay.json"
+MODES = (("DM", None), ("DC", None), ("DevMem", "HBM2"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="max tolerated slowdown vs the artifact")
+    ap.add_argument("--workload", default="bert-base.exact")
+    args = ap.parse_args(argv)
+    art = json.loads(ARTIFACT.read_text())[args.workload]
+    committed_wall = sum(m["compiled_s"] for m in art["modes"].values())
+    committed_evs = 3 * art["events"] / committed_wall
+
+    plan = model_stream_plan("bert-base")
+    events = len(plan.events)
+    if events != art["events"]:
+        print(f"note: plan now holds {events} events "
+              f"(artifact: {art['events']}) — builder changed; "
+              f"comparing events/sec on the current plan")
+    # host-speed calibration: the event engine's throughput on one
+    # mode, here vs in the artifact
+    t0 = time.perf_counter()
+    replay(default_system("DC"), plan, engine="event")
+    host_evs = events / (time.perf_counter() - t0)
+    host_factor = art["modes"]["DC"]["event_ev_per_s"] / host_evs
+    expect_evs = committed_evs / host_factor
+    wall = float("inf")
+    for _ in range(2):                 # best-of-2: shrug off CI noise
+        # each sweep starts cold, like the artifact's: the first mode
+        # pays the one-time trace analysis, later modes reuse it
+        plan.compile().memo.clear()
+        t0 = time.perf_counter()
+        for mode, dram in MODES:
+            replay(default_system(
+                mode, dram=DRAM(dram) if dram else None),
+                plan, engine="compiled")
+        wall = min(wall, time.perf_counter() - t0)
+    got_evs = 3 * events / wall
+    ratio = expect_evs / max(got_evs, 1e-9)
+    print(f"{args.workload}: {events} events, 3-mode compiled sweep "
+          f"{wall:.3f}s -> {got_evs:,.0f} ev/s "
+          f"(artifact {committed_evs:,.0f} ev/s, host factor "
+          f"{host_factor:.2f}x -> expected {expect_evs:,.0f} ev/s, "
+          f"slowdown {ratio:.2f}x, threshold {args.threshold:.1f}x)")
+    if ratio > args.threshold:
+        print("FAIL: compiled replay throughput regressed "
+              f">{args.threshold:.1f}x vs BENCH_replay.json")
+        return 1
+    print("OK: replay wall-clock trajectory within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

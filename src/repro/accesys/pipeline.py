@@ -675,6 +675,83 @@ def replay_schedule_compiled(cfg: SystemConfig, sched: P.PlanSchedule,
         host_s=host, drain_s=max(0.0, drain))
 
 
+def replay_trace(cfg: SystemConfig, plans,
+                 host_s_per_elem: float = HOST_S_PER_ELEM,
+                 footprint_pages: Optional[int] = None,
+                 engine: Optional[str] = None):
+    """Price an entire sequence of plans (e.g. a recorded serving
+    trace: prefills + per-step decode plans) as ONE replay on one
+    continuous timeline — shared SMMU/LLC state and shared page-id
+    interning across plans, so cross-step KV-page reuse is visible to
+    the translation and cache models instead of every step starting
+    cold.  Returns ``(aggregate GemmResult, per-plan seconds)`` where
+    the per-plan array reads each plan's contribution (its makespan
+    delta plus its own doorbell/IRQ control time) off the trajectory
+    at the recorded segment boundaries — the attribution the serving
+    report folds back onto requests.  ``sum(per_plan) == total_s``.
+
+    ``plans`` is a sequence of StreamPlans or a ``PlanSchedule`` whose
+    repeats are all 1 (build the schedule once and pass it to share the
+    compiled form and its trace-intrinsic LRU analysis across memory
+    modes).  Trace replay is exact: steady-state-sampled plans are
+    rejected.  The SMMU footprint defaults to the number of DISTINCT
+    pages the whole trace touches (the union, not the per-plan sum —
+    steps re-touch the same resident pool)."""
+    if isinstance(plans, P.PlanSchedule):
+        sched = plans
+    else:
+        sched = P.PlanSchedule("trace", [(p, 1) for p in plans])
+    if not sched.segments:
+        raise ValueError("replay_trace() needs at least one plan")
+    for pl, rep in sched.segments:
+        if rep != 1:
+            raise ValueError(
+                f"replay_trace() needs repeat-1 segments, got "
+                f"({pl.name}, {rep}) — use replay_schedule for "
+                "steady-state sampling")
+        if pl.sampled_steps != pl.total_steps:
+            raise ValueError(
+                f"trace replay is exact; plan {pl.name} is "
+                "steady-state sampled")
+    cp = sched.compile()
+    foot = len(cp.page_keys) if footprint_pages is None \
+        else footprint_pages
+    ctrl_unit = (cfg.dma.doorbell_ns + cfg.dma.interrupt_ns) * 1e-9
+    n_calls = np.array([pl.n_calls for pl, _ in sched.segments],
+                       np.float64)
+    macs = sum(pl.macs for pl, _ in sched.segments)
+    cfg.smmu.reset()
+    cfg.llc.reset()
+    if not _use_compiled(engine, cp.n_events, True):
+        tr = _Trace()
+        per = np.empty(len(sched.segments))
+        prev = 0.0
+        for i, (pl, _) in enumerate(sched.segments):
+            _replay_events(cfg, pl.events, foot, host_s_per_elem, tr)
+            per[i] = tr.makespan - prev
+            prev = tr.makespan
+        res = _result(cfg, tr, macs, int(n_calls.sum()))
+        return res, per + n_calls * ctrl_unit
+    t, x, has_p, d, ready, val = _compiled_arrays(cfg, cp, foot,
+                                                  host_s_per_elem)
+    k = cp.op_kind
+    tsa_a, tout_a, exp_a, t_sa, t_out = _run_ops(k, has_p, ready, val)
+    mks = np.maximum(tsa_a, tout_a)
+    bounds = np.concatenate([[0], cp.seg_op])
+    per = np.diff(np.concatenate([[0.0], mks])[bounds])
+    tr = _Trace(
+        t_sa_free=t_sa, t_out_free=t_out,
+        compute_s=float(val[k == P.OP_SA].sum()),
+        transfer_s=float(t.sum()),
+        exposed_s=float(exp_a.sum()),
+        desc_s=float(d[has_p].sum())
+        + float((k == P.OP_OUT).sum()) * cfg.dma.descriptor_time(),
+        trans_s=float(x.sum()),
+        host_s=float(val[k == P.OP_HOST].sum()))
+    res = _result(cfg, tr, macs, int(n_calls.sum()))
+    return res, per + n_calls * ctrl_unit
+
+
 def simulate_gemm(cfg: SystemConfig, M: int, N: int, K: int,
                   dtype: Optional[str] = None,
                   max_steps: int = 400_000,

@@ -18,9 +18,12 @@ layers / N-layer models composed from per-op plans, expert-routed MoE
 FFN layers (``moe_layer_plan`` — per-expert page sets sized by router
 capacity, mirroring ``models/moe.py``), scan-structured SSM layers
 (``ssm_layer_plan`` — chunked linear attention with a state-carry
-dependency chain, mirroring ``models/ssm.py``), and batched decode
-steps over a paged KV cache (``decode_step_plan`` — DMA_IN page ids
-taken verbatim from a live page table).
+dependency chain, mirroring ``models/ssm.py``), batched decode steps
+over a paged KV cache (``decode_step_plan`` — DMA_IN page ids taken
+verbatim from a live page table; GQA q-head fan-out and multi-layer
+composition), and prompt prefills over the same pool pages
+(``prefill_plan`` — chunked causal QK/PV over freshly written pages
+plus weight-streaming GEMMs).
 
 ``PlanSchedule`` is the steady-state-sampled view of a long composed
 plan: a list of (steady-window sub-plan, repeat count) segments.  The
@@ -123,12 +126,17 @@ class StreamPlan:
         """Pages the SMMU can see: per tensor, one page set per role
         (a tensor produced as C tiles and re-consumed as an A operand
         occupies both page namespaces, exactly as the replayer keys them).
+        Computed once per instance — plans are immutable after
+        ``validate()``, and every replay re-reads this.
         """
-        total = 0
-        for spec in self.tensors.values():
-            for role in spec.roles:
-                total += self._role_pages(spec, role)
-        return total
+        cached = self.__dict__.get("_footprint_pages")
+        if cached is None:
+            cached = 0
+            for spec in self.tensors.values():
+                for role in spec.roles:
+                    cached += self._role_pages(spec, role)
+            self.__dict__["_footprint_pages"] = cached
+        return cached
 
     def _role_pages(self, spec: TensorSpec, role: str) -> int:
         if role == "P":
@@ -383,8 +391,14 @@ class PlanSchedule:
     def footprint_pages(self) -> int:
         """SMMU-visible pages of the FULL (unsampled) workload: every
         repeat owns its own tensors (layer i's weights are distinct
-        pages from layer j's), so windows count once per repeat."""
-        return sum(p.footprint_pages * r for p, r in self.segments)
+        pages from layer j's), so windows count once per repeat.
+        Cached per instance (schedules are immutable after
+        ``validate()``, like the plans they hold)."""
+        cached = self.__dict__.get("_footprint_pages")
+        if cached is None:
+            cached = sum(p.footprint_pages * r for p, r in self.segments)
+            self.__dict__["_footprint_pages"] = cached
+        return cached
 
     @property
     def sampled_events(self) -> int:
@@ -943,6 +957,8 @@ def ssm_layer_weights(d_model: int, layer: int = 0) -> dict:
 def decode_step_plan(page_tables: Sequence[Sequence[int]],
                      lens: Sequence[int], page_tokens: int,
                      n_kv_heads: int, head_dim: int, elem: int, *,
+                     n_q_heads: Optional[int] = None,
+                     n_layers: int = 1,
                      q: str = "q", k: str = "k", v: str = "v",
                      out: str = "decode_out",
                      scale: Optional[float] = None,
@@ -957,10 +973,33 @@ def decode_step_plan(page_tables: Sequence[Sequence[int]],
     ``page_tables[b]`` lists the pool page ids sequence b holds;
     ``lens[b]`` is its valid token count; ``elem`` is the KV element
     size in bytes.  The plan's ``page_bytes`` is the KV page size, and
-    total DMA_IN bytes == 2 * sum(held_pages) * page_bytes — the bytes
-    actually resident for the batch."""
+    total DMA_IN bytes == n_layers * 2 * sum(held_pages) * page_bytes —
+    the bytes actually resident for the batch.
+
+    GQA (``n_q_heads > n_kv_heads``): each KV page is fetched ONCE and
+    the q-head fan-out becomes ``n_q_heads / n_kv_heads`` extra SA
+    passes over the loaded page (pass g covers the contiguous q-head
+    block ``[g*KH, (g+1)*KH)``, each q head reading kv head
+    ``h // group``) — KV bytes stay accounted per KV head while compute
+    and score traffic scale with the query heads.
+
+    ``n_layers > 1`` composes one per-layer plan (tensor names prefixed
+    ``L{i}.``, so each layer's KV pool pages occupy their own SMMU
+    namespace, exactly as the per-layer device pools would) via
+    ``concat`` — the exact multi-layer step.  ``decode_step_schedule``
+    is the steady-state-sampled counterpart (one layer window x
+    repeat)."""
     pt, KH, hd = page_tokens, n_kv_heads, head_dim
-    H = KH                          # MHA: one query head per KV head
+    HQ = KH if n_q_heads is None else n_q_heads
+    assert HQ % KH == 0, (HQ, KH)
+    group = HQ // KH
+    if n_layers > 1:
+        plans = [decode_step_plan(
+            page_tables, lens, pt, KH, hd, elem, n_q_heads=HQ,
+            q=f"L{i}.{q}", k=f"L{i}.{k}", v=f"L{i}.{v}",
+            out=f"L{i}.{out}", scale=scale, name=f"{name}.L{i}")
+            for i in range(n_layers)]
+        return concat(plans, name=name)
     page_bytes = pt * KH * hd * elem
     np_dt = _NP_FOR_ELEM[elem]
     scale = scale if scale is not None else hd ** -0.5
@@ -968,8 +1007,8 @@ def decode_step_plan(page_tables: Sequence[Sequence[int]],
     eid = 0
     macs = 0
     B = len(page_tables)
-    tensors = {q: TensorSpec(B, H * hd, set(), "input"),
-               out: TensorSpec(B * H, hd, {"C"}, "output")}
+    tensors = {q: TensorSpec(B, HQ * hd, set(), "input"),
+               out: TensorSpec(B * HQ, hd, {"C"}, "output")}
     k_pages: set = set()
     v_pages: set = set()
     for b, (tbl, ln) in enumerate(zip(page_tables, lens)):
@@ -978,54 +1017,252 @@ def decode_step_plan(page_tables: Sequence[Sequence[int]],
         if npg == 0:
             continue
         scores, p = f"{out}.s{b}", f"{out}.p{b}"
-        tensors[scores] = TensorSpec(H, npg * pt, set(), "intermediate")
-        tensors[p] = TensorSpec(H, npg * pt, set(), "intermediate")
+        tensors[scores] = TensorSpec(HQ, npg * pt, set(), "intermediate")
+        tensors[p] = TensorSpec(HQ, npg * pt, set(), "intermediate")
         for pi, pid in enumerate(tbl):
             k_pages.add(pid)
             ek = Event(eid, EventKind.DMA_IN, nbytes=page_bytes,
                        page=(k, pid), lane=0, op="load")
-            ec = Event(eid + 1, EventKind.COMPUTE, deps=(ek.eid,),
-                       op="attn_qk", unit="sa",
-                       meta={"q": q, "k": k, "page": pid, "slot": b,
-                             "page_idx": pi, "heads": H, "head_dim": hd,
-                             "pt": pt, "depth": hd, "scores": scores})
-            eo = Event(eid + 2, EventKind.DMA_OUT, nbytes=H * pt * elem,
-                       page=(scores, (0, pi)), deps=(ec.eid,),
-                       op="store", meta={"at": (0, pi * pt)})
-            events += [ek, ec, eo]
-            eid += 3
+            eid += 1
+            for g in range(group):
+                ec = Event(eid, EventKind.COMPUTE, deps=(ek.eid,),
+                           op="attn_qk", unit="sa",
+                           meta={"q": q, "k": k, "page": pid, "slot": b,
+                                 "page_idx": pi, "heads": KH,
+                                 "head_dim": hd, "pt": pt, "depth": hd,
+                                 "scores": scores, "g": g,
+                                 "q0": g * KH, "n_q": HQ,
+                                 "group": group})
+                eo = Event(eid + 1, EventKind.DMA_OUT,
+                           nbytes=KH * pt * elem,
+                           page=(scores, (g, pi)), deps=(ec.eid,),
+                           op="store", meta={"at": (g * KH, pi * pt)})
+                events += [ec, eo] if g else [ek, ec, eo]
+                eid += 2
         sm = Event(eid, EventKind.COMPUTE, deps=(eid - 1,),
                    op="masked_softmax", unit="host",
                    meta={"inputs": (scores,), "out": p,
-                         "elems": H * npg * pt, "valid": int(ln),
+                         "elems": HQ * npg * pt, "valid": int(ln),
                          "scale": scale})
         events.append(sm)
         eid += 1
-        chain = None
+        chain = [None] * group
         for pi, pid in enumerate(tbl):
             v_pages.add(pid)
             ev = Event(eid, EventKind.DMA_IN, nbytes=page_bytes,
                        page=(v, pid), lane=1, op="load")
-            deps = (ev.eid, sm.eid) if chain is None \
-                else (ev.eid, sm.eid, chain)
-            ec = Event(eid + 1, EventKind.COMPUTE, deps=deps,
-                       op="attn_pv", unit="sa",
-                       meta={"p": p, "v": v, "page": pid, "slot": b,
-                             "page_idx": pi, "heads": H, "head_dim": hd,
-                             "pt": pt, "depth": pt, "out": out,
-                             "first": pi == 0, "last": pi == npg - 1})
-            events += [ev, ec]
-            chain = ec.eid
-            eid += 2
-        events.append(Event(eid, EventKind.DMA_OUT,
-                            nbytes=H * hd * elem, page=(out, (b, 0)),
-                            deps=(chain,), op="store",
-                            meta={"at": (b * H, 0)}))
-        eid += 1
-        macs += npg * pt * H * hd * 2          # QK^T + PV per page
+            eid += 1
+            for g in range(group):
+                deps = (ev.eid, sm.eid) if chain[g] is None \
+                    else (ev.eid, sm.eid, chain[g])
+                ec = Event(eid, EventKind.COMPUTE, deps=deps,
+                           op="attn_pv", unit="sa",
+                           meta={"p": p, "v": v, "page": pid, "slot": b,
+                                 "page_idx": pi, "heads": KH,
+                                 "head_dim": hd, "pt": pt, "depth": pt,
+                                 "out": out, "g": g, "q0": g * KH,
+                                 "n_q": HQ, "group": group,
+                                 "first": pi == 0,
+                                 "last": pi == npg - 1})
+                events += [ec] if g else [ev, ec]
+                chain[g] = ec.eid
+                eid += 1
+        for g in range(group):
+            events.append(Event(eid, EventKind.DMA_OUT,
+                                nbytes=KH * hd * elem,
+                                page=(out, (b, g)),
+                                deps=(chain[g],), op="store",
+                                meta={"at": (b * HQ + g * KH, 0)}))
+            eid += 1
+        macs += npg * pt * HQ * hd * 2         # QK^T + PV per page
     tensors[k] = TensorSpec(len(k_pages) * pt, KH * hd, {"P"}, "input",
                             pages=len(k_pages))
     tensors[v] = TensorSpec(len(v_pages) * pt, KH * hd, {"P"}, "input",
                             pages=len(v_pages))
     return StreamPlan(name, np_dt, page_bytes, events, tensors,
                       macs=macs, n_calls=1)
+
+
+def decode_step_schedule(page_tables: Sequence[Sequence[int]],
+                         lens: Sequence[int], page_tokens: int,
+                         n_kv_heads: int, head_dim: int, elem: int,
+                         n_layers: int, *,
+                         n_q_heads: Optional[int] = None,
+                         out: str = "decode_out",
+                         scale: Optional[float] = None,
+                         name: str = "decode_step") -> PlanSchedule:
+    """Steady-state-sampled N-layer decode step: the layer stack is
+    homogeneous (every layer streams the same page-table composition),
+    so ONE layer's step plan is the steady window, repeated
+    ``n_layers`` times — layer i's pool pages are physically distinct
+    from layer j's, which is exactly the schedule footprint rule
+    (windows count once per repeat)."""
+    layer = decode_step_plan(page_tables, lens, page_tokens, n_kv_heads,
+                             head_dim, elem, n_q_heads=n_q_heads,
+                             out=out, scale=scale,
+                             name=f"{name}.layer")
+    return PlanSchedule(f"{name}_x{n_layers}~sampled",
+                        [(layer, n_layers)])
+
+
+# ------------------------------------------------------------- prefill
+def prefill_plan(page_table: Sequence[int], prompt_len: int,
+                 page_tokens: int, n_kv_heads: int, head_dim: int,
+                 elem: int, *,
+                 n_q_heads: Optional[int] = None,
+                 d_model: Optional[int] = None,
+                 d_ff: Optional[int] = None,
+                 n_layers: int = 1,
+                 x: str = "prompt", k: str = "k", v: str = "v",
+                 out: str = "prefill_out",
+                 scale: Optional[float] = None,
+                 name: str = "prefill") -> StreamPlan:
+    """One request's prompt prefill over the SAME ``PageTable`` pages a
+    decode step streams: per layer, a weight-streaming QKV projection
+    GEMM (Algorithm 1), DMA-out of the freshly produced K/V into the
+    sequence's pool pages (ids verbatim from the page table), then
+    chunked causal attention — the prompt is processed in page-sized
+    query chunks, each chunk streaming the KV pages written so far
+    (QK^T per page per q-head group, host masked-softmax over the
+    causal length, PV accumulation) — followed by the output-projection
+    and FFN weight-streaming GEMMs.
+
+    ``page_table`` lists the pool page ids the sequence holds (the
+    prompt occupies the first ``ceil(prompt_len / page_tokens)`` of
+    them); causality is modeled at chunk granularity (chunk i attends
+    to the first ``(i+1) * page_tokens`` positions).  Multi-layer plans
+    prefix all tensor names ``L{i}.`` so each layer's weights and KV
+    pages own their SMMU namespace; layer i's output feeds layer i+1.
+    """
+    pt, KH, hd = page_tokens, n_kv_heads, head_dim
+    HQ = KH if n_q_heads is None else n_q_heads
+    assert HQ % KH == 0, (HQ, KH)
+    group = HQ // KH
+    T = int(prompt_len)
+    npg = -(-T // pt)
+    tbl = [int(p) for p in page_table][:npg]
+    if len(tbl) != npg:
+        raise ValueError(
+            f"page_table holds {len(page_table)} pages but a "
+            f"{T}-token prompt needs {npg}")
+    dm = d_model if d_model is not None else HQ * hd
+    dff = d_ff if d_ff is not None else 4 * dm
+    page_bytes = pt * KH * hd * elem
+    np_dt = _NP_FOR_ELEM[elem]
+    scale = scale if scale is not None else hd ** -0.5
+
+    def layer_plans(P: str, x_in: str, out_name: str) -> list:
+        kt, vt = P + k, P + v
+        plans = [gemm_plan(T, (HQ + 2 * KH) * hd, dm, np_dt, a=x_in,
+                           b=P + "wqkv", c=P + "qkv", b_kind="weight",
+                           c_kind="intermediate", page_bytes=page_bytes)]
+        # write the freshly projected K/V into the sequence's pool
+        # pages — the same physical pages every later decode step (and
+        # every later chunk of this prefill) streams back in
+        events: list = []
+        eid = 0
+        for pid in tbl:
+            for pool in (kt, vt):
+                events.append(Event(eid, EventKind.DMA_OUT,
+                                    nbytes=page_bytes,
+                                    page=(pool, pid), op="store"))
+                eid += 1
+        kv_spec = lambda: TensorSpec(npg * pt, KH * hd, {"P"},
+                                     "intermediate", pages=npg)
+        plans.append(StreamPlan(P + "kv_write", np_dt, page_bytes,
+                                events, {kt: kv_spec(), vt: kv_spec()}))
+        # chunked causal attention over the written pages
+        events = []
+        eid = 0
+        macs = 0
+        attn = P + "attn"
+        tensors = {attn: TensorSpec(T, HQ * hd, {"C"}, "intermediate"),
+                   kt: kv_spec(), vt: kv_spec()}
+        for ci in range(npg):
+            t1 = min(T, (ci + 1) * pt)
+            qt = t1 - ci * pt
+            kv_upto = ci + 1
+            scores, p = P + f"c{ci}.s", P + f"c{ci}.p"
+            tensors[scores] = TensorSpec(HQ * qt, kv_upto * pt, set(),
+                                         "intermediate")
+            tensors[p] = TensorSpec(HQ * qt, kv_upto * pt, set(),
+                                    "intermediate")
+            for pi in range(kv_upto):
+                ek = Event(eid, EventKind.DMA_IN, nbytes=page_bytes,
+                           page=(kt, tbl[pi]), lane=0, op="load")
+                eid += 1
+                for g in range(group):
+                    ec = Event(eid, EventKind.COMPUTE, deps=(ek.eid,),
+                               op="prefill_qk", unit="sa",
+                               meta={"chunk": ci, "page_idx": pi,
+                                     "heads": KH, "q_tokens": qt,
+                                     "depth": hd, "g": g})
+                    eo = Event(eid + 1, EventKind.DMA_OUT,
+                               nbytes=KH * qt * pt * elem,
+                               page=(scores, (g, pi)), deps=(ec.eid,),
+                               op="store",
+                               meta={"at": (g * KH * qt, pi * pt)})
+                    events += [ec, eo] if g else [ek, ec, eo]
+                    eid += 2
+            sm = Event(eid, EventKind.COMPUTE, deps=(eid - 1,),
+                       op="masked_softmax", unit="host",
+                       meta={"inputs": (scores,), "out": p,
+                             "elems": HQ * qt * kv_upto * pt,
+                             "valid": t1, "scale": scale})
+            events.append(sm)
+            eid += 1
+            chain = [None] * group
+            for pi in range(kv_upto):
+                ev = Event(eid, EventKind.DMA_IN, nbytes=page_bytes,
+                           page=(vt, tbl[pi]), lane=1, op="load")
+                eid += 1
+                for g in range(group):
+                    deps = (ev.eid, sm.eid) if chain[g] is None \
+                        else (ev.eid, sm.eid, chain[g])
+                    ec = Event(eid, EventKind.COMPUTE, deps=deps,
+                               op="prefill_pv", unit="sa",
+                               meta={"chunk": ci, "page_idx": pi,
+                                     "heads": KH, "q_tokens": qt,
+                                     "depth": pt, "g": g,
+                                     "first": pi == 0,
+                                     "last": pi == kv_upto - 1})
+                    events += [ec] if g else [ev, ec]
+                    chain[g] = ec.eid
+                    eid += 1
+            for g in range(group):
+                events.append(Event(eid, EventKind.DMA_OUT,
+                                    nbytes=KH * qt * hd * elem,
+                                    page=(attn, (ci, g)),
+                                    deps=(chain[g],), op="store",
+                                    meta={"at": (ci * pt,
+                                                 g * KH * hd)}))
+                eid += 1
+            macs += qt * HQ * kv_upto * pt * hd * 2
+        plans.append(StreamPlan(P + "chunked_attn", np_dt, page_bytes,
+                                events, tensors, macs=macs, n_calls=1))
+        plans += [
+            gemm_plan(T, dm, HQ * hd, np_dt, a=attn, b=P + "wo",
+                      c=P + "proj", b_kind="weight",
+                      c_kind="intermediate", page_bytes=page_bytes),
+            host_plan("layernorm", (P + "proj",), P + "ln", (T, dm),
+                      2 * T * dm, np_dt, page_bytes),
+            gemm_plan(T, dff, dm, np_dt, a=P + "ln", b=P + "w1",
+                      c=P + "ff1", b_kind="weight",
+                      c_kind="intermediate", page_bytes=page_bytes),
+            host_plan("gelu", (P + "ff1",), P + "g", (T, dff), T * dff,
+                      np_dt, page_bytes),
+            gemm_plan(T, dm, dff, np_dt, a=P + "g", b=P + "w2",
+                      c=out_name, b_kind="weight", c_kind="output",
+                      page_bytes=page_bytes),
+        ]
+        return plans
+
+    plans: list = []
+    inp = x
+    for i in range(n_layers):
+        P = f"L{i}." if n_layers > 1 else ""
+        out_name = f"L{i}.{out}" if n_layers > 1 and i < n_layers - 1 \
+            else out
+        plans += layer_plans(P, inp, out_name)
+        inp = out_name
+    return concat(plans, name=f"{name}{T}t{n_layers}l")

@@ -222,22 +222,43 @@ def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
         elif ev.kind is P.EventKind.COMPUTE and ev.unit == "sa":
             m = ev.meta
             if ev.op == "attn_qk":     # q_b x one K page -> score block
-                page = np.asarray(buf.pop((m["k"], m["page"])),
-                                  np.float32)
+                # GQA: pass g covers the contiguous q-head block
+                # [q0, q0+heads); q head h reads kv head h // group
+                # (group == 1 is plain MHA).  The page is fetched once
+                # per (slot, page) — the LAST pass pops it.
+                g = m.get("g", 0)
+                grp = m.get("group", 1)
+                key_pg = (m["k"], m["page"])
+                page = np.asarray(buf.pop(key_pg) if g == grp - 1
+                                  else buf[key_pg], np.float32)
+                q0 = m.get("q0", 0)
                 qb = np.asarray(materialize(m["q"]))[m["slot"]] \
-                    .reshape(m["heads"], m["head_dim"]).astype(np.float32)
-                acc[(m["scores"], 0, m["page_idx"])] = \
-                    jnp.einsum("hd,thd->ht", qb, page)
+                    .reshape(m.get("n_q", m["heads"]), m["head_dim"]) \
+                    [q0:q0 + m["heads"]].astype(np.float32)
+                kv_idx = (q0 + np.arange(m["heads"])) // grp
+                acc[(m["scores"], g, m["page_idx"])] = \
+                    jnp.einsum("hd,thd->ht", qb, page[:, kv_idx, :])
             elif ev.op == "attn_pv":   # prob block x one V page, accum
-                page = np.asarray(buf.pop((m["v"], m["page"])),
-                                  np.float32)
+                g = m.get("g", 0)
+                grp = m.get("group", 1)
+                key_pg = (m["v"], m["page"])
+                page = np.asarray(buf.pop(key_pg) if g == grp - 1
+                                  else buf[key_pg], np.float32)
                 pt = m["pt"]
+                q0 = m.get("q0", 0)
                 pb = np.asarray(materialize(m["p"]))[
-                    :, m["page_idx"] * pt:(m["page_idx"] + 1) * pt
+                    q0:q0 + m["heads"],
+                    m["page_idx"] * pt:(m["page_idx"] + 1) * pt
                 ].astype(np.float32)
-                part = jnp.einsum("ht,thd->hd", pb, page)
-                key = (m["out"], m["slot"], 0)
+                kv_idx = (q0 + np.arange(m["heads"])) // grp
+                part = jnp.einsum("ht,thd->hd", pb, page[:, kv_idx, :])
+                key = (m["out"], m["slot"], g)
                 acc[key] = part if m["first"] else acc[key] + part
+            elif ev.op in ("prefill_qk", "prefill_pv"):
+                raise NotImplementedError(
+                    "prefill plans are timing-only: chunked prefill "
+                    "attention has no functional executor yet (replay "
+                    "them with accesys.pipeline.replay/replay_trace)")
             else:                      # gemm: one W×W×depth tile step
                 at = buf.pop((m["a"], m["a_page"]))
                 bt = buf.pop((m["b"], m["b_page"]))
@@ -253,6 +274,10 @@ def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
                 mats[name] = np.asarray(r)
                 produced.add(name)
         else:                       # DMA_OUT: drain one accumulated tile
+            if not isinstance(ev.page[1], tuple):
+                raise NotImplementedError(
+                    f"DMA_OUT to pool page {ev.page!r} (e.g. a prefill "
+                    "kv_write) is timing-only — no functional executor")
             name, (i, j) = ev.page
             spec = plan.tensors[name]
             w = paging.SA_DIM

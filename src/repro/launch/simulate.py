@@ -10,9 +10,11 @@ Builds the requested plan — a single Algorithm-1 GEMM, a composed
 N-layer transformer forward pass, or one of the workload classes the
 plan layer can express (``bert``/``vit`` dense encoders, ``moe``
 expert-routed FFN stacks, ``ssm`` scan layers, ``decode`` paged-KV
-decode steps) — and replays it against the accesys component models in
-each memory mode, printing end-to-end latency and the Fig.-2 bucket
-shares.
+decode steps, ``serve`` a recorded continuous-batching engine trace:
+prefill + multi-layer GQA decode plans replayed batched, with
+simulated per-request TTFT/TPOT percentiles printed per mode) — and
+replays it against the accesys component models in each memory mode,
+printing end-to-end latency and the Fig.-2 bucket shares.
 
 Workloads replay steady-state sampled by default (one layer window x
 repeat count; ``--sample-stride`` additionally strides the GEMM inner
@@ -40,7 +42,7 @@ from repro.configs.paper_models import PAPER_MODELS
 from repro.core import plan as plan_ir
 
 WORKLOAD_MODELS = {"bert": "bert-base", "vit": "vit-base-16"}
-WORKLOADS = ("bert", "vit", "moe", "ssm", "decode")
+WORKLOADS = ("bert", "vit", "moe", "ssm", "decode", "serve")
 
 # tiny-but-representative geometry for the synthetic workload classes
 MOE_SHAPE = dict(n_tokens=64, d_model=128, n_experts=8, top_k=2,
@@ -99,6 +101,30 @@ _SYNTH = {
                 **SSM_SHAPE),
             "S"),
 }
+
+
+def _serve_trace():
+    """A short but real recorded serving trace: run the reduced-model
+    continuous-batching engine with ``record_plans=True`` (prefill plan
+    per admission + multi-layer GQA decode plan per step) and return
+    ``engine.trace``.  KV plans are fp16 regardless of ``--dtype`` (the
+    engine's cache dtype decides)."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models.model import Model
+    from repro.serving.engine import Request, ServingEngine
+    cfg = get_reduced("qwen2_0_5b")
+    params = Model(cfg, remat="none").init(jax.random.PRNGKey(0))
+    import numpy as np
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=48,
+                        record_plans=True)
+    for i in range(5):
+        eng.submit(Request(
+            uid=i, prompt=rng.integers(1, 250, size=8).astype(np.int32),
+            max_new_tokens=6))
+    eng.run_until_drained(max_steps=200)
+    return eng.trace
 
 
 def build_workload(workload: str, dtype: str, layers: int,
@@ -167,7 +193,23 @@ def main(argv=None) -> int:
 
     plan = None
     label = None
-    if args.model or args.workload:
+    serve_trace = None
+    foot_override = None
+    if args.workload == "serve":
+        # a recorded engine trace: replayed batched as a repeat-1
+        # schedule (parity machinery below applies unchanged), then
+        # folded back onto requests per mode.  The SMMU footprint is
+        # the UNION of pages the trace touches (steps re-stream the
+        # same resident pool), matching replay_trace — not the
+        # schedule default of summing per-record footprints.
+        from repro.serving.sim_report import trace_schedule
+        serve_trace = _serve_trace()
+        plan = trace_schedule(serve_trace)
+        foot_override = len(plan.compile().page_keys)
+        replayed = total_ev = plan.sampled_events
+        args.dtype = "fp16"               # KV/weight plans are fp16
+        label = f"serve_trace({len(serve_trace)} records)"
+    elif args.model or args.workload:
         wl = args.model or args.workload
         plan, replayed, total_ev = build_workload(
             wl, args.dtype, args.layers or 0, args.sample_stride,
@@ -201,7 +243,8 @@ def main(argv=None) -> int:
         else:
             for eng in engines:
                 t0 = time.perf_counter()
-                results[eng] = replay(cfg, plan, engine=eng)
+                results[eng] = replay(cfg, plan, engine=eng,
+                                      footprint_pages=foot_override)
                 wall = time.perf_counter() - t0
                 print(f"{label} {args.dtype} {mode:7s} "
                       f"{_fmt(results[eng])}  "
@@ -220,6 +263,15 @@ def main(argv=None) -> int:
                         f"compiled={va!r} event={vb!r}")
             print(f"{gname or label} {mode}: compiled == event "
                   f"(all GemmResult fields, rtol<=1e-9)")
+        if serve_trace is not None:
+            from repro.serving.sim_report import simulate_serving_trace
+            rep = simulate_serving_trace(cfg, serve_trace, sched=plan)
+            pct = rep.percentiles()
+            print(f"serve {mode:7s} simulated latency: " + "  ".join(
+                f"{k}={pct[k]:.1f}" for k in
+                ("ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
+                 "tpot_p50_us", "tpot_p95_us", "tpot_p99_us")) +
+                f"  requests={pct['requests']}")
     return 0
 
 

@@ -31,6 +31,23 @@ class Request:
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
     output: list = dataclasses.field(default_factory=list)
+    # index into the engine's plan trace at submission time — the
+    # simulated-arrival anchor for TTFT attribution (0 == trace start)
+    arrival_event: int = 0
+
+
+@dataclasses.dataclass
+class PlanRecord:
+    """One priced event of a recorded serving trace: a prompt prefill
+    (one per admission) or a batched multi-layer decode step, tagged
+    with the engine step index and the slot -> request-uid mapping so
+    simulated time folds back onto individual requests."""
+    kind: str                       # "prefill" | "decode"
+    step_idx: int                   # engine decode-step counter
+    slots: tuple                    # slot ids this plan covers
+    uids: tuple                     # request uid per slot
+    plan: object                    # core.plan.StreamPlan
+    arrival_event: int = 0          # prefill: requester's arrival index
 
 
 @dataclasses.dataclass
@@ -47,16 +64,33 @@ class EngineStats:
 
 class ServingEngine:
     """``record_plans=True`` shadows the dense decode cache with a
-    driver-side ``PageTable`` (no device pools) and records one
-    ``decode_step_plan`` per engine step — page ids and valid lengths
-    track the REAL batch composition (admissions, retirements, page
-    churn) over the run, so the accesys replayer can price a whole
-    serving trace after the fact (``step_plans``)."""
+    driver-side ``PageTable`` (no device pools) and records a
+    request-centric plan trace (``trace``): one ``prefill_plan`` per
+    admission and one multi-layer GQA ``decode_step_plan`` per engine
+    step, each tagged with ``(step_idx, slot -> uid)`` — page ids and
+    valid lengths track the REAL batch composition (admissions,
+    retirements, page churn) over the run, so one batched accesys
+    replay prices the whole trace and folds simulated time back onto
+    individual requests (``serving.sim_report``).
+
+    Admission against the shadow pool is CONSERVATIVE: a request is
+    admitted only if the free list can hold its maximum length
+    (prompt + max_new_tokens, capped at ``max_seq``) on top of the
+    worst-case remaining growth of every already-admitted request —
+    so decode-time page growth can never fail and the engine never
+    crashes mid-run on pool pressure.  Otherwise the request is
+    DEFERRED at the head of the queue (FIFO order preserved) until
+    retirements drain enough pages.  A request whose maximum length
+    cannot fit even an empty pool raises ``ValueError`` at admission
+    time (a configuration error deferral would turn into a livelock).
+    ``kv_pool_pages`` caps the pool (default: every slot can grow to
+    ``max_seq``, so only explicit caps ever defer)."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_seq: int = 256, eos_token: Optional[int] = None,
                  record_plans: bool = False, kv_page_tokens: int = 8,
-                 kv_dtype: str = "float16"):
+                 kv_dtype: str = "float16",
+                 kv_pool_pages: Optional[int] = None):
         self.cfg = cfg
         self.model = Model(cfg, remat="none")
         self.params = params
@@ -69,7 +103,8 @@ class ServingEngine:
         self.stats = EngineStats()
         self._next_tokens = np.zeros((slots,), np.int32)
         self._remaining = np.zeros((slots,), np.int32)
-        self.step_plans: list = []
+        self.trace: list[PlanRecord] = []
+        self.deferred_admissions = 0
         self._table = None
         if record_plans:
             from repro.serving.kv_cache import (PagedCacheConfig,
@@ -77,7 +112,7 @@ class ServingEngine:
             pages_per_seq = -(-max_seq // kv_page_tokens)
             self._table = PageTable(
                 PagedCacheConfig(
-                    n_pages=slots * pages_per_seq,
+                    n_pages=kv_pool_pages or slots * pages_per_seq,
                     page_tokens=kv_page_tokens,
                     n_kv_heads=cfg.n_kv_heads,
                     head_dim=cfg.resolved_head_dim,
@@ -89,15 +124,55 @@ class ServingEngine:
         self._prefill1 = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq))
 
+    @property
+    def step_plans(self) -> list:
+        """The decode plans of the recorded trace, in step order
+        (compatibility view of ``trace``)."""
+        return [r.plan for r in self.trace if r.kind == "decode"]
+
     # ------------------------------------------------------------- API
     def submit(self, req: Request):
         req.submitted_s = time.perf_counter()
+        req.arrival_event = len(self.trace)
         self.queue.append(req)
+
+    def _max_pages(self, req: Request) -> int:
+        """Worst-case pages ``req`` can ever hold: its final cache
+        length is min(prompt + max_new_tokens - 1, max_seq - 1), padded
+        to max_seq here for safety."""
+        max_len = min(len(req.prompt) + req.max_new_tokens,
+                      self.max_seq)
+        return -(-max_len // self._table.cfg.page_tokens)
+
+    def _can_admit(self, req: Request) -> bool:
+        t = self._table
+        need = self._max_pages(req)
+        if need > min(t.cfg.n_pages, t.cfg.max_pages_per_seq):
+            raise ValueError(
+                f"request uid={req.uid} needs {need} KV pages at its "
+                f"max length but the pool can never hold that "
+                f"(n_pages={t.cfg.n_pages}, "
+                f"max_pages_per_seq={t.cfg.max_pages_per_seq})")
+        # pages admitted slots may still claim while decoding
+        growth = sum(self._max_pages(r) - int(t.held[s])
+                     for s, r in enumerate(self.slot_req)
+                     if r is not None)
+        return len(t._free) >= need + growth
 
     def _admit(self):
         for slot in range(self.slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
+            if self._table is not None:
+                if not self._can_admit(self.queue[0]):
+                    # defer admission — the request stays queued until
+                    # retirements free enough pages for its max length
+                    self.deferred_admissions += 1
+                    return
+                if not self._table.alloc_seq(
+                        slot, len(self.queue[0].prompt)):
+                    raise RuntimeError(       # _can_admit guarantees it
+                        "shadow KV table out of pages at admission")
             req = self.queue.popleft()
             cache1, logits = self._prefill1(
                 self.params, {"tokens": jnp.asarray(req.prompt[None])})
@@ -119,10 +194,18 @@ class ServingEngine:
             self.slot_req[slot] = req
             self.stats.tokens_out += 1
             if self._table is not None:
-                if not self._table.alloc_seq(slot, len(req.prompt)) \
-                        or not self._table.note_tokens(
-                            slot, int(self.cache["len"][slot])):
+                if not self._table.note_tokens(
+                        slot, int(self.cache["len"][slot])):
                     raise RuntimeError("shadow KV table out of pages")
+                self.trace.append(PlanRecord(
+                    "prefill", self.stats.decode_steps, (slot,),
+                    (req.uid,),
+                    self._table.prefill_plan(
+                        slot, len(req.prompt),
+                        n_q_heads=self.cfg.n_heads,
+                        d_model=self.cfg.d_model, d_ff=self.cfg.d_ff,
+                        n_layers=self.cfg.n_layers),
+                    arrival_event=req.arrival_event))
 
     def _retire(self, slot: int):
         req = self.slot_req[slot]
@@ -141,7 +224,12 @@ class ServingEngine:
         if self._table is not None:
             # the step streams each active slot's currently-resident KV
             # pages; the new token's KV lands before the next step
-            self.step_plans.append(self._table.decode_step_plan(active))
+            self.trace.append(PlanRecord(
+                "decode", self.stats.decode_steps, tuple(active),
+                tuple(self.slot_req[s].uid for s in active),
+                self._table.decode_step_plan(
+                    active, n_q_heads=self.cfg.n_heads,
+                    n_layers=self.cfg.n_layers)))
         toks = jnp.asarray(self._next_tokens)
         self.cache, logits = self._decode(self.params, self.cache, toks)
         self.stats.decode_steps += 1

@@ -82,13 +82,17 @@ class PageTable:
         self.active[slot] = False
 
     def ensure_capacity(self, slot: int, new_len: int) -> bool:
-        """Grow the table if the next token crosses a page boundary."""
+        """Grow the table if the next token crosses a page boundary.
+        Pages assigned before the free list runs dry stay recorded in
+        ``held`` (no leak on a failed partial growth — ``free_seq``
+        returns them)."""
         have = int(self.held[slot])
         need = -(-new_len // self.cfg.page_tokens)
         if need > self.cfg.max_pages_per_seq:
             return False
         while have < need:
             if not self._free:
+                self.held[slot] = have
                 return False
             self.tables[slot, have] = self._free.pop()
             have += 1
@@ -106,11 +110,17 @@ class PageTable:
         return True
 
     # ------------------------------------------------------- streaming
-    def decode_step_plan(self, slots, out: str = "decode_out"):
+    def decode_step_plan(self, slots, out: str = "decode_out", *,
+                         n_q_heads: Optional[int] = None,
+                         n_layers: int = 1):
         """StreamPlan for one batched decode step over these slots —
         DMA_IN page ids taken verbatim from the live page tables, so
         the plan's page traffic IS the pool traffic (driver-side only:
-        tables / lens / held, never any device pool)."""
+        tables / lens / held, never any device pool).  ``n_q_heads``
+        enables GQA fan-out over the shared KV pages; ``n_layers``
+        composes the exact per-layer stack (this table's composition
+        stands in for every layer's, as the real per-layer pools share
+        one admission schedule)."""
         from repro.core import plan as plan_ir
         tables = [self.tables[s, :int(self.held[s])]
                   if self.active[s] else [] for s in slots]
@@ -118,7 +128,29 @@ class PageTable:
                 for s in slots]
         return plan_ir.decode_step_plan(
             tables, lens, self.cfg.page_tokens, self.cfg.n_kv_heads,
-            self.cfg.head_dim, _np_itemsize(self.cfg.dtype), out=out)
+            self.cfg.head_dim, _np_itemsize(self.cfg.dtype), out=out,
+            n_q_heads=n_q_heads, n_layers=n_layers)
+
+    def prefill_plan(self, slot: int, prompt_len: Optional[int] = None,
+                     *, n_q_heads: Optional[int] = None,
+                     d_model: Optional[int] = None,
+                     d_ff: Optional[int] = None, n_layers: int = 1,
+                     out: str = "prefill_out"):
+        """StreamPlan for prefilling ``slot``'s prompt into the pages
+        it holds (chunked causal QK/PV over the freshly written pool
+        pages + weight-streaming GEMMs) — see
+        ``core.plan.prefill_plan``."""
+        from repro.core import plan as plan_ir
+        held = int(self.held[slot])
+        if prompt_len is None:
+            prompt_len = int(self.lens[slot]) or held * \
+                self.cfg.page_tokens
+        return plan_ir.prefill_plan(
+            self.tables[slot, :held], prompt_len, self.cfg.page_tokens,
+            self.cfg.n_kv_heads, self.cfg.head_dim,
+            _np_itemsize(self.cfg.dtype), n_q_heads=n_q_heads,
+            d_model=d_model, d_ff=d_ff, n_layers=n_layers, out=out,
+            name=f"prefill.s{slot}")
 
     @property
     def pages_in_use(self) -> int:

@@ -38,7 +38,7 @@ def assert_parity(plan, mode="DC", dram=None, recur=None, rtol=1e-9):
 
 
 # ------------------------------------------------------------ workloads
-def _decode_plan():
+def _page_table():
     from repro.serving.kv_cache import PagedCacheConfig, PageTable
     pt = PageTable(PagedCacheConfig(
         n_pages=32, page_tokens=8, n_kv_heads=2, head_dim=16,
@@ -49,7 +49,16 @@ def _decode_plan():
     pt.free_seq(1)
     assert pt.alloc_seq(1, 12)          # churned page ids
     pt.note_tokens(1, 12)
-    return pt.decode_step_plan([0, 1, 2])
+    return pt
+
+
+def _decode_plan(**kw):
+    return _page_table().decode_step_plan([0, 1, 2], **kw)
+
+
+def _prefill_plan():
+    return _page_table().prefill_plan(0, 20, n_q_heads=4, d_model=32,
+                                      d_ff=64, n_layers=2)
 
 
 WORKLOADS = {
@@ -59,6 +68,8 @@ WORKLOADS = {
     "moe": lambda: P.moe_layer_plan(64, 128, 8, 2, 256, "int8"),
     "ssm": lambda: P.ssm_layer_plan(128, 128, 4, "int8", chunk=16),
     "decode": _decode_plan,
+    "decode_gqa": lambda: _decode_plan(n_q_heads=8, n_layers=3),
+    "prefill": _prefill_plan,
 }
 
 SCHEDULES = {
@@ -70,6 +81,10 @@ SCHEDULES = {
     "ssm": lambda: P.ssm_schedule(128, 128, 4, 4, "int8"),
     "decode": lambda: P.PlanSchedule(
         "decode_x5", [(_decode_plan(), 5)]),
+    "serve_trace": lambda: P.PlanSchedule(
+        "trace", [(_prefill_plan(), 1),
+                  (_decode_plan(n_q_heads=4, n_layers=2), 1),
+                  (_decode_plan(n_q_heads=4, n_layers=2), 1)]),
 }
 
 
