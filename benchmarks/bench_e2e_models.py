@@ -1,17 +1,18 @@
 """Table 9: end-to-end transformer speedups vs baselines (incl. the
 published TiC-SAT / SMAUG comparison rows), plus the composed
 StreamPlan replay of the full forward pass per mode — and plan-timed
-MoE / SSM layer-stack rows across DM/DC/DevMem."""
+MoE / SSM layer-stack rows across DM/DC/DevMem.  All simulator rows
+route through the Scenario API (one plan shared per DM/DC/DevMem
+sweep)."""
 from repro.accesys import workloads as W
-from repro.accesys.pipeline import replay
 from repro.accesys.system import (SMAUG_SPEEDUP, TICSAT_SPEEDUP,
                                   default_system, run_transformer_accel,
-                                  run_transformer_composed,
                                   run_transformer_cpu)
 from repro.accesys.calibration import PAPER_TABLE9
-from repro.accesys.components import DRAM
-from repro.core import plan as plan_ir
-from benchmarks.common import emit
+from repro.core.scenario import Scenario, sweep
+from benchmarks.common import emit, simresult_rows
+
+MODES = ("DM", "DC", "DevMem")
 
 
 def main():
@@ -36,29 +37,18 @@ def main():
     # composed event-graph replay: one StreamPlan timeline across
     # QKV / per-head attention / FFN (2 layers keep the graph small;
     # per-layer cost is uniform, so this is the per-layer latency x2)
-    for mode, dram in (("DM", None), ("DC", None),
-                       ("DevMem", DRAM("HBM2"))):
-        r = run_transformer_composed(
-            default_system(mode, dram=dram), "bert-medium", n_layers=2)
-        rows.append((f"bert-medium.composed2.{mode}",
-                     round(r.total_s * 1e6, 1),
-                     f"host_share={r.buckets()['host']:.3f};"
-                     f"exposed_share={r.buckets()['transfer']:.3f}"))
-    # plan-timed MoE / SSM layer stacks (steady-state sampled: one layer
-    # window x 4), same Fig.-2 bucket machinery as the dense rows
-    moe = plan_ir.moe_layer_plan(64, 128, 8, 2, 256, "int8")
-    ssm = plan_ir.ssm_layer_plan(128, 128, 4, "int8", chunk=16)
-    for cls, layer in (("moe", moe), ("ssm", ssm)):
-        sched = plan_ir.PlanSchedule(f"{cls}_x4", [(layer, 4)])
-        for mode, dram in (("DM", None), ("DC", None),
-                           ("DevMem", DRAM("HBM2"))):
-            r = replay(default_system(mode, dram=dram), sched)
-            rows.append((f"{cls}.composed4.{mode}",
-                         round(r.total_s * 1e6, 1),
-                         f"host_share={r.buckets()['host']:.3f};"
-                         f"exposed_share={r.buckets()['transfer']:.3f};"
-                         f"events={sched.sampled_events}/"
-                         f"{sched.exact_events}"))
+    rows += simresult_rows(
+        sweep([Scenario(model="bert-medium", n_layers=2,
+                        sampling="exact", mode=m) for m in MODES]),
+        namer=lambda r: f"bert-medium.composed2.{r.mode}")
+    # plan-timed MoE / SSM layer stacks (steady-state sampled: one
+    # layer window x 4), same Fig.-2 bucket machinery as dense rows
+    for cls in ("moe", "ssm"):
+        rows += simresult_rows(
+            sweep([Scenario(model=cls, n_layers=4, mode=m)
+                   for m in MODES]),
+            namer=lambda r, cls=cls: f"{cls}.composed4.{r.mode}",
+            events=True)
     emit(rows, "table9_e2e")
 
 

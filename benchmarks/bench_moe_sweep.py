@@ -1,50 +1,45 @@
 """MoE DM/DC/DevMem sweep over expert count x capacity factor (ROADMAP
 item): EXACT composed replays of 2-layer expert-routed FFN stacks —
-practical only with the compiled replay engine (steady-state sampling
-previously stood in for anything this size).  Shows how routing width
-and capacity headroom move the Fig.-2 buckets per memory mode."""
+practical only with the compiled replay engine.  Shows how routing
+width and capacity headroom move the Fig.-2 buckets per memory mode.
+Each (E, cf) cell is one Scenario; ``sweep`` shares the lowered plan
+(and its compiled form) across the three memory modes."""
 import time
 
-from repro.accesys.components import DRAM
-from repro.accesys.pipeline import replay
-from repro.accesys.system import default_system
-from repro.core import plan as plan_ir
+from repro.core.scenario import Scenario, as_params, sweep
 from repro.models.moe import routed_capacity
-from benchmarks.common import emit
+from benchmarks.common import emit, simresult_rows
 
 N_TOKENS, D_MODEL, D_FF, TOP_K, LAYERS = 256, 256, 512, 2, 2
-
-
-def moe_stack(n_experts: int, capacity_factor: float):
-    return plan_ir.concat(
-        [plan_ir.moe_layer_plan(
-            N_TOKENS, D_MODEL, n_experts, TOP_K, D_FF, "int8",
-            capacity_factor=capacity_factor, layer=i,
-            x="x" if i == 0 else f"M{i-1}.out")
-         for i in range(LAYERS)],
-        name=f"moe_E{n_experts}_cf{capacity_factor}")
+MODES = ("DM", "DC", "DevMem")
 
 
 def main():
     rows = []
     t0 = time.perf_counter()
+    n_cells = 0
     for n_experts in (4, 8, 16):
         for cf in (1.0, 1.25, 1.5):
-            plan = moe_stack(n_experts, cf)
             cap = routed_capacity(N_TOKENS * TOP_K, n_experts, None, cf)
-            for mode, dram in (("DM", None), ("DC", None),
-                               ("DevMem", DRAM("HBM2"))):
-                r = replay(default_system(mode, dram=dram), plan,
-                           engine="compiled")
-                b = r.buckets()
-                rows.append((
-                    f"E{n_experts}.cf{cf}.{mode}",
-                    round(r.total_s * 1e6, 1),
-                    f"capacity={cap};events={len(plan.events)};"
-                    f"transfer_share={b['transfer']:.3f};"
-                    f"host_share={b['host']:.3f};"
-                    f"tlb_miss={r.tlb_misses}"))
-    print(f"# 27 exact composed replays in "
+            scs = [Scenario(
+                model="moe", sampling="exact", n_layers=LAYERS,
+                engine="compiled", mode=mode,
+                params=as_params(n_tokens=N_TOKENS, d_model=D_MODEL,
+                                 d_ff=D_FF, top_k=TOP_K,
+                                 n_experts=n_experts,
+                                 capacity_factor=cf))
+                for mode in MODES]
+            results = sweep(scs)
+            n_cells += len(results)
+            rows += simresult_rows(
+                results,
+                namer=lambda r, E=n_experts, cf=cf:
+                    f"E{E}.cf{cf}.{r.mode}",
+                keys=("transfer", "host"),
+                extra=lambda r, cap=cap:
+                    f"capacity={cap};events={r.events_replayed};"
+                    f"tlb_miss={r.result.tlb_misses}")
+    print(f"# {n_cells} exact composed replays in "
           f"{time.perf_counter() - t0:.1f}s (compiled engine)")
     emit(rows, "moe_sweep")
 

@@ -1,94 +1,63 @@
 """Replay-engine benchmark: compiled (array-form) vs event-loop replay
 wall-clock and events/sec per workload class, with the exact BERT-Base
-composed replay as the headline row.
+composed replay as the headline row.  Every plan is lowered through the
+Scenario API (``core.scenario``).
 
 Writes the usual CSV rows plus ``BENCH_replay.json`` at the repo root —
 the seed of the perf trajectory: events, per-mode wall-clocks for both
-engines, events/sec, plan-build and compile times, and the aggregate
+engines, events/sec, plan-build and compile times, the aggregate
 speedup across DM/DC/DevMem (the sweep use case; the first compiled
-mode pays the one-time trace analysis that later modes reuse)."""
+mode pays the one-time trace analysis that later modes reuse), and the
+full ``SimResult`` JSON (schema ``simresult/v1``) of each compiled
+mode run."""
+import dataclasses
 import json
 import time
 from pathlib import Path
 
-from repro.accesys.components import DRAM
 from repro.accesys.pipeline import replay
-from repro.accesys.system import default_system, model_stream_plan, \
-    model_stream_schedule
-from repro.core import plan as plan_ir
-from repro.serving.kv_cache import PagedCacheConfig, PageTable
+from repro.core import scenario as SC
+from repro.core.scenario import Scenario, SimResult, as_params, \
+    scenario_plan, system_for
 from benchmarks.common import emit
 
 JSON_PATH = Path("BENCH_replay.json")
 
-MODES = (("DM", None), ("DC", None), ("DevMem", "HBM2"))
+MODES = ("DM", "DC", "DevMem")
 
-
-def _decode_trace_plan():
-    """A batched decode plan from a churned driver-side PageTable (no
-    device pools needed to price serving traffic)."""
-    pt = PageTable(PagedCacheConfig(
-        n_pages=256, page_tokens=8, n_kv_heads=8, head_dim=64,
-        max_pages_per_seq=32, dtype="float16"), max_seqs=8)
-    for slot, ln in enumerate((96, 40, 17, 64, 128, 9, 200, 55)):
-        if not pt.alloc_seq(slot, ln) or not pt.note_tokens(slot, ln):
-            raise RuntimeError(f"KV pool too small for slot {slot}")
-    pt.free_seq(3)
-    if not pt.alloc_seq(3, 77) or not pt.note_tokens(3, 77):
-        raise RuntimeError("KV pool too small for readmitted slot 3")
-    return pt.decode_step_plan(list(range(8)))
-
-
-def _moe_stack():
-    sh = dict(n_tokens=64, d_model=128, d_ff=256)
-    return plan_ir.concat(
-        [plan_ir.moe_layer_plan(n_experts=8, top_k=2, dtype="int8",
-                                layer=i, x="x" if i == 0 else
-                                f"M{i-1}.out", **sh)
-         for i in range(2)], name="moe_x2")
-
-
-def _ssm_stack():
-    return plan_ir.concat(
-        [plan_ir.ssm_layer_plan(128, 128, 4, "int8", chunk=16, layer=i,
-                                x="x" if i == 0 else f"S{i-1}.out")
-         for i in range(2)], name="ssm_x2")
-
-
-def _workloads():
-    return [
-        ("gemm1024", lambda: plan_ir.gemm_plan_cached(1024, 1024, 1024,
-                                                      "int8")),
-        ("bert-base.exact", lambda: model_stream_plan("bert-base")),
-        ("bert-base.sampled", lambda: model_stream_schedule("bert-base")),
-        ("moe.exact_x2", _moe_stack),
-        ("ssm.exact_x2", _ssm_stack),
-        ("decode_step", _decode_trace_plan),
-    ]
-
-
-def _events_of(plan):
-    return plan.sampled_events if isinstance(plan, plan_ir.PlanSchedule) \
-        else len(plan.events)
+WORKLOADS = [
+    ("gemm1024", Scenario(model="gemm",
+                          params=as_params(m=1024, n=1024, k=1024))),
+    ("bert-base.exact", Scenario(model="bert-base", sampling="exact")),
+    ("bert-base.sampled", Scenario(model="bert-base")),
+    ("moe.exact_x2", Scenario(model="moe", sampling="exact",
+                              n_layers=2)),
+    ("ssm.exact_x2", Scenario(model="ssm", sampling="exact",
+                              n_layers=2)),
+    ("decode_step", Scenario(
+        model="decode", dtype="fp16",
+        params=as_params(n_pages=256, page_tokens=8, n_kv_heads=8,
+                         head_dim=64, max_pages_per_seq=32,
+                         prompt_lens=(96, 40, 17, 64, 128, 9, 200, 55),
+                         churn=((3, 77),), n_q_heads=None))),
+]
 
 
 def main():
     rows = []
     report = {}
-    for name, build in _workloads():
+    for name, sc in WORKLOADS:
         t0 = time.perf_counter()
-        plan = build()
+        plan, label, events, total = scenario_plan(sc)
         build_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         plan.compile()
         compile_s = time.perf_counter() - t0
-        events = _events_of(plan)
         wl = {"events": events, "build_s": round(build_s, 4),
               "compile_s": round(compile_s, 4), "modes": {}}
         tot_e = tot_c = 0.0
-        for mode, dram_name in MODES:
-            dram = DRAM(dram_name) if dram_name else None
-            cfg = default_system(mode, dram=dram)
+        for mode in MODES:
+            cfg = system_for(dataclasses.replace(sc, mode=mode))
             t0 = time.perf_counter()
             rc = replay(cfg, plan, engine="compiled")
             wall_c = time.perf_counter() - t0
@@ -99,6 +68,12 @@ def main():
             assert err < 1e-9, (name, mode, err)
             tot_e += wall_e
             tot_c += wall_c
+            sim = SimResult(
+                scenario=dataclasses.replace(sc, mode=mode,
+                                             engine="compiled"),
+                label=label, mode=mode, engine="compiled", result=rc,
+                events_replayed=events, events_total=total,
+                wall_s=wall_c)
             wl["modes"][mode] = {
                 "event_s": round(wall_e, 4),
                 "compiled_s": round(wall_c, 4),
@@ -106,6 +81,7 @@ def main():
                 "compiled_ev_per_s": round(events / max(wall_c, 1e-9)),
                 "speedup": round(wall_e / max(wall_c, 1e-9), 2),
                 "total_us": round(re.total_s * 1e6, 3),
+                "sim": sim.to_json(),
             }
         wl["speedup_all_modes"] = round(tot_e / max(tot_c, 1e-9), 2)
         report[name] = wl
@@ -117,7 +93,9 @@ def main():
     report["_meta"] = {
         "note": "wall-clock of replay() per engine; compiled modes "
                 "share one plan compile + trace analysis (memoized), "
-                "so the first mode carries that one-time cost",
+                "so the first mode carries that one-time cost; plans "
+                "lowered via core.scenario, per-mode 'sim' entries "
+                "follow the simresult/v1 schema",
         "acceptance": "bert-base.exact speedup_all_modes >= 10x",
     }
     JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
@@ -126,7 +104,7 @@ def main():
     emit(rows, "replay_engines")
     # drop the exact full-depth graph (order-100 MB with its compiled
     # arrays) so the rest of a benchmarks/run.py session isn't pinning it
-    model_stream_plan.cache_clear()
+    SC.clear_caches()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,44 @@
+"""Sampled-vs-exact error bars for heterogeneous steady-state schedules
+(ROADMAP sampling follow-on): the compiled engine makes EXACT replays
+of composed stacks cheap, so the steady-state assumption can be
+measured instead of trusted.  Runs the zamba2-reduced mamba/attention
+interleave (one steady window per layer CLASS with its own repeat)
+sampled AND exact per memory mode, plus the homogeneous bert-base
+stack as a reference point, and records the error in the ``SimResult``
+artifact (``sampling_error`` field, schema simresult/v1) written to
+``artifacts/bench/sampling_error.json``."""
+from repro.core.scenario import Scenario, sampling_error
+from benchmarks.common import emit, simresult_row, write_json_artifact
+
+MODES = ("DM", "DC", "DevMem")
+CASES = (
+    # the heterogeneous target: 4 mamba + 2 shared-attention blocks
+    Scenario(model="zamba2-7b-reduced", seq=64, engine="compiled"),
+    # homogeneous reference: one window class, 12 repeats
+    Scenario(model="bert-base", n_layers=12, engine="compiled"),
+)
+
+
+def main():
+    import dataclasses
+    rows = []
+    artifact = []
+    for base in CASES:
+        for mode in MODES:
+            res = sampling_error(dataclasses.replace(base, mode=mode))
+            err = res.sampling_error
+            rows.append(simresult_row(
+                res, name=f"{base.model}.{mode}",
+                keys=("host",),
+                extra=f"rel_err_total={err['rel_err_total']:.2e};"
+                      f"exact_us={err['exact_total_us']:.1f};"
+                      f"events={err['events_sampled']}/"
+                      f"{err['events_exact']}"))
+            artifact.append(res.to_json())
+    path = write_json_artifact(artifact, "sampling_error")
+    print(f"# wrote {path}")
+    emit(rows, "sampling_error")
+
+
+if __name__ == "__main__":
+    main()

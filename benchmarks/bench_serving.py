@@ -1,114 +1,91 @@
 """Measured serving throughput of the continuous-batching engine on a
 reduced model (real wall-clock on this host), plus the request-centric
-serving simulation: the engine records a plan trace — one prefill plan
-per admission and one multi-layer GQA decode plan per step — and ONE
-batched compiled replay prices the whole 200+-step trace per memory
-mode (shared page interning, one continuous timeline; no per-step
-Python loop over plans), emitting simulated TTFT/TPOT p50/p95/p99
-attributed to individual requests."""
-import time
-
-import jax
-import jax.numpy as jnp
+serving simulation routed through the Scenario API: the ``serve``
+scenario records an engine plan trace — one prefill plan per admission
+and one multi-layer GQA decode plan per step — and ONE batched compiled
+replay prices the whole 200+-step trace per memory mode (shared page
+interning, one continuous timeline), emitting simulated TTFT/TPOT
+p50/p95/p99 attributed to individual requests.  ``sweep`` reuses the
+recorded trace (and its compiled schedule) across the three modes."""
 import numpy as np
 
-from repro.accesys.components import DRAM
-from repro.accesys.pipeline import replay
-from repro.accesys.system import default_system
-from repro.configs import get_reduced
 from repro.core.plan import EventKind
-from repro.models.model import Model
-from repro.serving.engine import Request, ServingEngine
-from repro.serving.kv_cache import PagedCacheConfig, PagedKVCache
-from repro.serving.sim_report import (simulate_serving_trace,
-                                      trace_schedule)
-from benchmarks.common import emit
+from repro.core.scenario import Scenario, as_params, scenario_plan, sweep
+from benchmarks.common import emit, simresult_rows
 
-MODES = (("DM", None), ("DC", None), ("DevMem", "HBM2"))
+MODES = ("DM", "DC", "DevMem")
+
+# the recorded-trace scenario: 28 requests on 4 slots, prompts 6-15
+# tokens, 32 new tokens each -> 28 prefills + 200+ decode steps
+SERVE = as_params(arch="qwen2_0_5b", slots=4, n_requests=28,
+                  max_new_tokens=32, max_seq=96, prompt_lo=6,
+                  prompt_hi=16, seed=1)
+# plan-timed batched decode over a live driver-side page table
+DECODE = as_params(n_pages=128, page_tokens=8, n_kv_heads=4,
+                   head_dim=32, max_pages_per_seq=16,
+                   prompt_lens=(96, 40, 17, 64), churn=(),
+                   n_q_heads=None)
 
 
 def decode_plan_rows():
-    """Plan-timed batched decode: page ids straight from the live page
+    """Batched decode step: page ids straight from the live page
     tables, replayed against the component models per memory mode."""
-    ccfg = PagedCacheConfig(n_pages=128, page_tokens=8, n_kv_heads=4,
-                            head_dim=32, max_pages_per_seq=16,
-                            dtype="float16")
-    cache = PagedKVCache(ccfg, max_seqs=4)
-    kv = lambda t: jnp.zeros((t, ccfg.n_kv_heads, ccfg.head_dim),
-                             jnp.float16)
-    for slot, ln in enumerate((96, 40, 17, 64)):
-        if not cache.alloc_seq(slot, ln):
-            raise RuntimeError(f"KV pool too small for slot {slot}")
-        cache.write_prompt(slot, kv(ln), kv(ln))
-    plan = cache.decode_step_plan([0, 1, 2, 3])
+    scs = [Scenario(model="decode", dtype="fp16", mode=m,
+                    params=DECODE) for m in MODES]
+    plan, _, _, _ = scenario_plan(scs[0])
     dma_bytes = sum(ev.nbytes for ev in plan.events
                     if ev.kind is EventKind.DMA_IN)
-    rows = []
-    for mode, dram in MODES:
-        r = replay(default_system(mode, dtype="fp16",
-                                  dram=DRAM(dram) if dram else None),
-                   plan)
-        rows.append((f"decode_plan.{mode}", round(r.total_s * 1e6, 2),
-                     f"kv_bytes={dma_bytes};"
-                     f"pages={cache.pages_in_use};"
-                     f"transfer_share={r.buckets()['transfer']:.3f}"))
-    return rows
+    # distinct pool pages the plan streams (page key = (tensor, pid);
+    # K and V pools share the same page-id set)
+    pages = len({ev.page[1] for ev in plan.events
+                 if ev.kind is EventKind.DMA_IN})
+    return simresult_rows(
+        sweep(scs), namer=lambda r: f"decode_plan.{r.mode}",
+        keys=("transfer",),
+        extra=lambda r: f"kv_bytes={dma_bytes};pages={pages}")
 
 
-def engine_trace_rows(cfg, params):
+def engine_trace_rows():
     """Replay a >=200-step engine trace per memory mode as ONE batched
-    compiled replay: the engine records one prefill plan per admission
-    and one multi-layer GQA decode plan per step; per mode the whole
-    trace is priced on one continuous timeline and the per-request
-    TTFT/TPOT percentiles are read off it."""
-    rng = np.random.default_rng(1)
-    eng = ServingEngine(cfg, params, slots=4, max_seq=96,
-                        record_plans=True)
-    for i in range(28):
-        eng.submit(Request(
-            uid=i,
-            prompt=rng.integers(1, 250, size=int(rng.integers(6, 16))
-                                ).astype(np.int32),
-            max_new_tokens=32))
-    eng.run_until_drained(max_steps=2000)
-    trace = eng.trace
-    decode_steps = sum(1 for r in trace if r.kind == "decode")
-    prefills = len(trace) - decode_steps
-    if decode_steps < 200:
-        raise RuntimeError(f"trace too short: {decode_steps} steps")
-    sched = trace_schedule(trace)       # one compile, shared per mode
+    compiled replay and read the per-request TTFT/TPOT percentiles off
+    the continuous timeline."""
+    results = sweep([Scenario(model="serve", dtype="fp16", mode=m,
+                              engine="compiled", params=SERVE)
+                     for m in MODES])
+    sv = results[0].serving
+    if sv["decode_steps"] < 200:
+        raise RuntimeError(f"trace too short: {sv['decode_steps']} steps")
     rows = []
-    for mode, dram in MODES:
-        sys_cfg = default_system(mode, dtype="fp16",
-                                 dram=DRAM(dram) if dram else None)
-        t0 = time.perf_counter()
-        rep = simulate_serving_trace(sys_cfg, trace, sched=sched,
-                                     engine="compiled")
-        wall = time.perf_counter() - t0
-        pct = rep.percentiles()
-        decode_s = sum(s for s, r in zip(rep.per_event_s, trace)
-                       if r.kind == "decode")
-        rows.append((f"trace_replay.{mode}",
-                     round(rep.total_s * 1e6, 1),
-                     f"steps={decode_steps};prefills={prefills};"
-                     f"events={sched.sampled_events};"
-                     f"replay_wall_s={wall:.2f};"
+    for r in results:
+        sv = r.serving
+        rows.append((f"trace_replay.{r.mode}",
+                     round(r.total_s * 1e6, 1),
+                     f"steps={sv['decode_steps']};"
+                     f"prefills={sv['prefills']};"
+                     f"events={r.events_replayed};"
+                     f"replay_wall_s={r.wall_s:.2f};"
                      f"sim_us_per_decode_step="
-                     f"{decode_s * 1e6 / decode_steps:.2f};"
-                     f"prefill_share="
-                     f"{1 - decode_s / rep.total_s:.3f}"))
-        rows.append((f"serving_latency.{mode}",
-                     round(pct["ttft_p50_us"], 1),
-                     f"ttft_p95_us={pct['ttft_p95_us']:.1f};"
-                     f"ttft_p99_us={pct['ttft_p99_us']:.1f};"
-                     f"tpot_p50_us={pct['tpot_p50_us']:.2f};"
-                     f"tpot_p95_us={pct['tpot_p95_us']:.2f};"
-                     f"tpot_p99_us={pct['tpot_p99_us']:.2f};"
-                     f"requests={pct['requests']}"))
+                     f"{sv['sim_us_per_decode_step']:.2f};"
+                     f"prefill_share={sv['prefill_share']:.3f}"))
+        rows.append((f"serving_latency.{r.mode}",
+                     round(sv["ttft_p50_us"], 1),
+                     f"ttft_p95_us={sv['ttft_p95_us']:.1f};"
+                     f"ttft_p99_us={sv['ttft_p99_us']:.1f};"
+                     f"tpot_p50_us={sv['tpot_p50_us']:.2f};"
+                     f"tpot_p95_us={sv['tpot_p95_us']:.2f};"
+                     f"tpot_p99_us={sv['tpot_p99_us']:.2f};"
+                     f"requests={sv['requests']}"))
     return rows
 
 
 def main():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models.model import Model
+    from repro.serving.engine import Request, ServingEngine
+    # the serve scenario initializes its own reduced model inside the
+    # scenario trace cache (self-contained across callers); the rows
+    # below measure REAL engine wall-clock, so they need their own
     cfg = get_reduced("qwen2_0_5b")
     params = Model(cfg, remat="none").init(jax.random.PRNGKey(0))
     rows = []
@@ -124,7 +101,7 @@ def main():
                      f"tokens_per_s={st.tokens_per_s:.1f};"
                      f"decode_steps={st.decode_steps}"))
     rows += decode_plan_rows()
-    rows += engine_trace_rows(cfg, params)
+    rows += engine_trace_rows()
     emit(rows, "serving_throughput")
 
 

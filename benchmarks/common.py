@@ -1,6 +1,8 @@
 """Shared benchmark plumbing: CSV emission per the harness contract
-(``name,us_per_call,derived``)."""
+(``name,us_per_call,derived``) plus the ``SimResult``-consuming helpers
+every simulator benchmark formats its rows and artifacts with."""
 import csv
+import json
 import os
 import sys
 import time
@@ -30,3 +32,48 @@ def timeit(fn, *args, warmup=1, iters=3):
     for _ in range(iters):
         out = jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+# ------------------------------------------------- SimResult consumers
+def derived_str(res, keys=("host", "transfer"), extra="") -> str:
+    """The ``derived`` CSV column from a ``SimResult``: the requested
+    Fig.-2 bucket shares (``{k}_share=``), plus any caller extras."""
+    b = res.buckets()
+    parts = [f"{k}_share={b[k]:.3f}" for k in keys]
+    if extra:
+        parts.append(extra)
+    return ";".join(parts)
+
+
+def simresult_row(res, name=None, keys=("host", "transfer"),
+                  extra="", events=False) -> tuple:
+    """One emit() row from a ``SimResult``: name defaults to
+    ``label.mode``; ``events=True`` appends the sampled/exact event
+    counts."""
+    if events:
+        ev = f"events={res.events_replayed}/{res.events_total}"
+        extra = f"{extra};{ev}" if extra else ev
+    return (name or f"{res.label}.{res.mode}",
+            round(res.total_s * 1e6, 1),
+            derived_str(res, keys, extra))
+
+
+def simresult_rows(results, namer=None, keys=("host", "transfer"),
+                   extra=None, events=False) -> list:
+    """Rows for a list of ``SimResult``s; ``namer(res)`` / ``extra(res)``
+    customize per-row naming and the derived tail."""
+    return [simresult_row(r,
+                          name=namer(r) if namer else None,
+                          keys=keys,
+                          extra=extra(r) if extra else "",
+                          events=events)
+            for r in results]
+
+
+def write_json_artifact(obj, name) -> Path:
+    """Stable-schema JSON artifact next to the CSVs (SimResult
+    ``to_json()`` payloads and friends)."""
+    OUTDIR.mkdir(parents=True, exist_ok=True)
+    path = OUTDIR / f"{name}.json"
+    path.write_text(json.dumps(obj, indent=2) + "\n")
+    return path

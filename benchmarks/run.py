@@ -20,6 +20,7 @@ MODULES = [
     "bench_serving",           # engine throughput + trace replay
     "bench_replay",            # compiled-vs-event engines -> BENCH_replay.json
     "bench_moe_sweep",         # exact MoE expert x capacity sweep
+    "bench_sampling_error",    # steady-state sampling error bars
 ]
 
 

@@ -1,5 +1,6 @@
 """Quickstart: build a small LM, train a few steps on the synthetic
-corpus, then serve it — the whole public API in ~40 lines.
+corpus, serve it, then simulate it on the streaming accelerator via
+the Scenario API — the whole public API in ~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +12,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.configs.base import RunConfig, ShapeConfig
+from repro.core.scenario import Scenario, simulate
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.train_loop import Trainer, TrainerConfig
 from repro.serving.engine import Request, ServingEngine
@@ -40,6 +42,15 @@ def main():
     print(f"[serve] {stats.tokens_out} tokens at "
           f"{stats.tokens_per_s:.1f} tok/s "
           f"({stats.prefills} prefills, {stats.decode_steps} decode steps)")
+
+    # what-if simulation: the same model on the paper's streaming
+    # accelerator, per memory mode — any configs/ name works here
+    for mode in ("DM", "DC", "DevMem"):
+        res = simulate(Scenario(model=cfg.name, mode=mode, seq=64))
+        b = res.buckets()
+        print(f"[simulate] {res.label} {mode:7s} "
+              f"total={res.total_s*1e6:8.1f}us "
+              f"compute={b['compute']:.1%} host={b['host']:.1%}")
 
 
 if __name__ == "__main__":

@@ -155,6 +155,10 @@ def run_transformer_cpu(wl: W.Workload, cpu: Optional[CPUModel] = None,
 
 
 # -------------------------------------------- composed StreamPlan path
+# NOTE: prefer the Scenario API (core.scenario.simulate/sweep) for new
+# callers — these helpers remain as the BERT/ViT-specific lowering the
+# workload tests pin, and run_transformer_composed is a thin shim over
+# the same replay the façade uses.
 # maxsize stays small: an exact full-depth graph plus its compiled
 # arrays is order-100 MB, and sweeps only ever reuse the last few
 @functools.lru_cache(maxsize=4)

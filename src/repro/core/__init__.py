@@ -1,1 +1,2 @@
-from repro.core import modes, overlap, paging, plan, streaming  # noqa: F401
+from repro.core import modes, overlap, paging, plan, scenario, \
+    streaming  # noqa: F401

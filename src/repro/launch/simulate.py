@@ -1,171 +1,106 @@
-"""Offline what-if simulation CLI over the StreamPlan IR.
+"""Offline what-if simulation CLI — a thin front-end over the Scenario
+API (``core.scenario``).
 
-    PYTHONPATH=src python -m repro.launch.simulate --model bert-medium \
-        --modes DM DC DevMem --layers 2
+    PYTHONPATH=src python -m repro.launch.simulate --workload zamba2-7b-reduced
+    PYTHONPATH=src python -m repro.launch.simulate --model bert-medium --layers 2
     PYTHONPATH=src python -m repro.launch.simulate --gemm 512 512 512
-    PYTHONPATH=src python -m repro.launch.simulate --workload moe
-    PYTHONPATH=src python -m repro.launch.simulate --workload decode
+    PYTHONPATH=src python -m repro.launch.simulate --workload serve
+    PYTHONPATH=src python -m repro.launch.simulate --list
+    PYTHONPATH=src python -m repro.launch.simulate --smoke
 
-Builds the requested plan — a single Algorithm-1 GEMM, a composed
-N-layer transformer forward pass, or one of the workload classes the
-plan layer can express (``bert``/``vit`` dense encoders, ``moe``
-expert-routed FFN stacks, ``ssm`` scan layers, ``decode`` paged-KV
-decode steps, ``serve`` a recorded continuous-batching engine trace:
-prefill + multi-layer GQA decode plans replayed batched, with
-simulated per-request TTFT/TPOT percentiles printed per mode) — and
-replays it against the accesys component models in each memory mode,
-printing end-to-end latency and the Fig.-2 bucket shares.
+``--workload`` (and its historical alias ``--model``) accepts ANY name
+from the scenario registry: every ``configs/*.py`` ``ModelConfig``
+(full or ``-reduced``), the paper's BERT/ViT models, the workload-class
+aliases (``bert``/``vit``), and the synthetic classes
+(``moe``/``ssm``/``decode``/``serve``/``gemm``).  Unknown names get a
+did-you-mean error listing the valid scenarios — resolution always goes
+through the registry, never a partial name table.
 
-Workloads replay steady-state sampled by default (one layer window x
-repeat count; ``--sample-stride`` additionally strides the GEMM inner
-loops); ``--exact`` materializes and replays the full composed event
-graph.  The events-replayed vs events-total line makes the sampling
-speedup visible.
-
-``--engine`` selects the replayer: the compiled array engine (the
-default for anything non-trivial) or the event loop; ``--engine both``
-runs the two and asserts they agree to float tolerance — the parity
-check CI runs per workload class.  Each mode row reports the replay
-wall-clock and events/sec, so the compiled engine's speedup is
-measured, not asserted.
+Workloads replay steady-state sampled by default (one window per layer
+CLASS x repeat — heterogeneous stacks like zamba2 sample each class
+separately); ``--exact`` materializes the full composed event graph.
+``--engine both`` replays on the compiled array engine AND the event
+loop and asserts every result field agrees to rtol 1e-9.  ``--smoke``
+runs the registry-generated CI matrix: one reduced scenario per model
+family, engine parity on each.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import dataclasses
 
-from repro.accesys.components import DRAM
-from repro.accesys.pipeline import replay, simulate_gemm
-from repro.accesys.system import (default_system, model_stream_plan,
-                                  model_stream_schedule)
-from repro.configs.paper_models import PAPER_MODELS
-from repro.core import plan as plan_ir
-
-WORKLOAD_MODELS = {"bert": "bert-base", "vit": "vit-base-16"}
-WORKLOADS = ("bert", "vit", "moe", "ssm", "decode", "serve")
-
-# tiny-but-representative geometry for the synthetic workload classes
-MOE_SHAPE = dict(n_tokens=64, d_model=128, n_experts=8, top_k=2,
-                 d_ff=256)
-SSM_SHAPE = dict(T=128, d_model=128, n_heads=4, chunk=16)
-DECODE_SHAPE = dict(n_pages=64, page_tokens=8, n_kv_heads=4,
-                    head_dim=32, max_pages_per_seq=8,
-                    prompt_lens=(20, 9, 33))
+from repro.core.scenario import (Scenario, SimResult, UnsupportedScenario,
+                                 as_params, resolve, scenario_names,
+                                 simulate, smoke_matrix)
 
 
-def _fmt(r) -> str:
+def _fmt(res: SimResult) -> str:
+    r = res.result
     b = r.buckets()
     shares = " ".join(f"{k}={v:5.1%}" for k, v in b.items())
     return f"total={r.total_s*1e6:10.1f}us  {shares}  " \
            f"tlb_miss={r.tlb_misses}  gops={r.gops:.1f}"
 
 
-def _decode_plan(dtype: str) -> "plan_ir.StreamPlan":
-    """A decode step over a LIVE paged KV cache: admit a few sequences,
-    append/retire to churn the free list, then plan from the real page
-    tables."""
-    import jax.numpy as jnp
-    from repro.serving.kv_cache import PagedCacheConfig, PagedKVCache
-    sh = DECODE_SHAPE
-    np_dt = plan_ir.np_dtype_for(dtype)
-    cfg = PagedCacheConfig(
-        n_pages=sh["n_pages"], page_tokens=sh["page_tokens"],
-        n_kv_heads=sh["n_kv_heads"], head_dim=sh["head_dim"],
-        max_pages_per_seq=sh["max_pages_per_seq"], dtype=np_dt)
-    cache = PagedKVCache(cfg, max_seqs=len(sh["prompt_lens"]))
-    kv = lambda t: jnp.zeros((t, cfg.n_kv_heads, cfg.head_dim), np_dt)
-    for slot, ln in enumerate(sh["prompt_lens"]):
-        if not cache.alloc_seq(slot, ln):
-            raise RuntimeError(f"KV pool too small for slot {slot}")
-        cache.write_prompt(slot, kv(ln), kv(ln))
-    cache.free_seq(1)                       # retire + readmit: churn
-    if not cache.alloc_seq(1, sh["prompt_lens"][1] + 3):
-        raise RuntimeError("KV pool too small for readmitted slot 1")
-    cache.write_prompt(1, kv(sh["prompt_lens"][1] + 3),
-                       kv(sh["prompt_lens"][1] + 3))
-    return cache.decode_step_plan(list(range(len(sh["prompt_lens"]))))
-
-
-# workload -> (exact layer-plan builder, schedule builder, name prefix)
-_SYNTH = {
-    "moe": (lambda dtype, i, x: plan_ir.moe_layer_plan(
-                dtype=dtype, layer=i, x=x, **MOE_SHAPE),
-            lambda dtype, layers, stride: plan_ir.moe_schedule(
-                dtype=dtype, n_layers=layers, sample_stride=stride,
-                **MOE_SHAPE),
-            "M"),
-    "ssm": (lambda dtype, i, x: plan_ir.ssm_layer_plan(
-                dtype=dtype, layer=i, x=x, **SSM_SHAPE),
-            lambda dtype, layers, stride: plan_ir.ssm_schedule(
-                dtype=dtype, n_layers=layers, sample_stride=stride,
-                **SSM_SHAPE),
-            "S"),
-}
-
-
-def _serve_trace():
-    """A short but real recorded serving trace: run the reduced-model
-    continuous-batching engine with ``record_plans=True`` (prefill plan
-    per admission + multi-layer GQA decode plan per step) and return
-    ``engine.trace``.  KV plans are fp16 regardless of ``--dtype`` (the
-    engine's cache dtype decides)."""
-    import jax
-    from repro.configs import get_reduced
-    from repro.models.model import Model
-    from repro.serving.engine import Request, ServingEngine
-    cfg = get_reduced("qwen2_0_5b")
-    params = Model(cfg, remat="none").init(jax.random.PRNGKey(0))
-    import numpy as np
-    rng = np.random.default_rng(0)
-    eng = ServingEngine(cfg, params, slots=2, max_seq=48,
-                        record_plans=True)
-    for i in range(5):
-        eng.submit(Request(
-            uid=i, prompt=rng.integers(1, 250, size=8).astype(np.int32),
-            max_new_tokens=6))
-    eng.run_until_drained(max_steps=200)
-    return eng.trace
-
-
-def build_workload(workload: str, dtype: str, layers: int,
-                   sample_stride: int, exact: bool):
-    """Returns (plan-or-schedule, events_replayed, events_total).
-    ``workload`` is a workload class or a PAPER_MODELS name."""
-    if workload in WORKLOAD_MODELS or workload in PAPER_MODELS:
-        name = WORKLOAD_MODELS.get(workload, workload)
-        layers = layers or PAPER_MODELS[name].n_layers
-        if exact:
-            plan = model_stream_plan(name, layers, dtype)
-            return plan, len(plan.events), plan.n_exact_events
-        sched = model_stream_schedule(name, layers, dtype, sample_stride)
-        return sched, sched.sampled_events, sched.exact_events
-    if workload in _SYNTH:
-        mk_layer, mk_sched, prefix = _SYNTH[workload]
-        layers = layers or 2
-        if exact:
-            plan = plan_ir.concat(
-                [mk_layer(dtype, i,
-                          "x" if i == 0 else f"{prefix}{i-1}.out")
-                 for i in range(layers)], name=f"{workload}_x{layers}")
-            return plan, len(plan.events), plan.n_exact_events
-        sched = mk_sched(dtype, layers, sample_stride)
-        return sched, sched.sampled_events, sched.exact_events
-    assert workload == "decode", workload
-    plan = _decode_plan(dtype)
-    return plan, len(plan.events), plan.n_exact_events
+def _run_modes(sc: Scenario, modes, engine: str) -> None:
+    """Simulate one scenario across memory modes, printing a row per
+    (mode, engine); ``engine="both"`` prints both rows plus the parity
+    confirmation ``simulate`` asserts internally."""
+    header = None
+    for mode in modes:
+        engines = ("compiled", "event") if engine == "both" \
+            else (engine,)
+        results = {}
+        for eng in engines:
+            res = simulate(dataclasses.replace(sc, mode=mode,
+                                               engine=eng))
+            results[eng] = res
+            if header is None:
+                # serve replays a recorded trace exactly — the
+                # sampling policy does not apply to it
+                policy = "trace" if res.serving is not None \
+                    else sc.sampling
+                header = f"{res.label} ({policy}): events " \
+                         f"replayed={res.events_replayed} " \
+                         f"total={res.events_total} " \
+                         f"({res.sampling_speedup:.1f}x fewer)"
+                print(header)
+            print(f"{res.label} {res.scenario.dtype} {mode:7s} "
+                  f"{_fmt(res)}  [{res.engine}: "
+                  f"wall={res.wall_s*1e3:.1f}ms "
+                  f"{res.events_per_s:,.0f} ev/s]")
+        last = results[engines[-1]]
+        if last.serving is not None:    # once per mode, engines agree
+            pct = last.serving
+            print(f"serve {mode:7s} simulated latency: " + "  ".join(
+                f"{k}={pct[k]:.1f}" for k in
+                ("ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
+                 "tpot_p50_us", "tpot_p95_us", "tpot_p99_us")) +
+                f"  requests={pct['requests']}")
+        if engine == "both":
+            from repro.core.scenario import assert_parity
+            assert_parity(results["compiled"], results["event"])
+            print(f"{results['compiled'].label} {mode}: compiled == "
+                  f"event (all GemmResult fields, rtol<=1e-9)")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--model", choices=sorted(PAPER_MODELS),
-                    help="composed transformer forward pass")
-    ap.add_argument("--workload", choices=WORKLOADS,
-                    help="workload class over the plan layer "
-                         "(steady-state sampled unless --exact)")
-    ap.add_argument("--layers", type=int, default=None,
-                    help="cap the layer stack (default: full model / 2)")
+    ap.add_argument("--workload", metavar="SCENARIO",
+                    help="any scenario-registry name (see --list)")
+    ap.add_argument("--model", metavar="SCENARIO",
+                    help="historical alias of --workload")
     ap.add_argument("--gemm", type=int, nargs=3, metavar=("M", "N", "K"),
                     help="single Algorithm-1 GEMM instead of a model")
+    ap.add_argument("--list", action="store_true",
+                    help="print every valid scenario name and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="registry-generated CI matrix: one reduced "
+                         "scenario per model family, engine parity")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="cap the layer stack (default: full model)")
+    ap.add_argument("--seq", type=int, default=None,
+                    help="sequence length (default: per-model)")
     ap.add_argument("--dtype", default="int8",
                     choices=["int8", "int16", "int32", "fp8", "fp16",
                              "fp32"])
@@ -184,94 +119,42 @@ def main(argv=None) -> int:
     ap.add_argument("--devmem-dram", default="HBM2",
                     help="DRAM tech for DevMem mode (paper Fig. 12)")
     args = ap.parse_args(argv)
-    if not args.model and not args.gemm and not args.workload:
-        ap.error("one of --model / --gemm / --workload is required")
+    if args.list:
+        print("\n".join(scenario_names()))
+        return 0
+    name = args.model or args.workload
+    if args.smoke:
+        for sc in smoke_matrix():
+            sc = dataclasses.replace(sc, devmem_dram=args.devmem_dram)
+            _run_modes(sc, args.modes, "both")
+        print(f"smoke matrix OK: {len(smoke_matrix())} scenarios x "
+              f"{len(args.modes)} modes, engine parity held")
+        return 0
+    if not name and not args.gemm:
+        ap.error("one of --workload / --model / --gemm / --smoke / "
+                 "--list is required")
     if args.layers is not None and args.layers < 1:
         ap.error("--layers must be >= 1")
     if args.sample_stride < 1:
         ap.error("--sample-stride must be >= 1")
 
-    plan = None
-    label = None
-    serve_trace = None
-    foot_override = None
-    if args.workload == "serve":
-        # a recorded engine trace: replayed batched as a repeat-1
-        # schedule (parity machinery below applies unchanged), then
-        # folded back onto requests per mode.  The SMMU footprint is
-        # the UNION of pages the trace touches (steps re-stream the
-        # same resident pool), matching replay_trace — not the
-        # schedule default of summing per-record footprints.
-        from repro.serving.sim_report import trace_schedule
-        serve_trace = _serve_trace()
-        plan = trace_schedule(serve_trace)
-        foot_override = len(plan.compile().page_keys)
-        replayed = total_ev = plan.sampled_events
-        args.dtype = "fp16"               # KV/weight plans are fp16
-        label = f"serve_trace({len(serve_trace)} records)"
-    elif args.model or args.workload:
-        wl = args.model or args.workload
-        plan, replayed, total_ev = build_workload(
-            wl, args.dtype, args.layers or 0, args.sample_stride,
-            args.exact)
-        label = f"{args.model} x{args.layers or PAPER_MODELS[args.model].n_layers}" \
-            if args.model else getattr(plan, "name", wl)
-    if plan is not None:
-        speedup = total_ev / max(replayed, 1)
-        kind = "exact" if args.exact else "sampled"
-        print(f"{label} ({kind}): events replayed={replayed} "
-              f"total={total_ev} ({speedup:.1f}x fewer)")
-
-    for mode in args.modes:
-        dram = DRAM(args.devmem_dram) if mode == "DevMem" else None
-        cfg = default_system(mode, dtype=args.dtype, dram=dram)
-        engines = ["compiled", "event"] if args.engine == "both" \
-            else [args.engine]
-        results = {}
-        gname = None
-        if args.gemm:
-            m, n, k = args.gemm
-            gname = f"gemm{m}x{n}x{k}"
-            for eng in engines:
-                t0 = time.perf_counter()
-                results[eng] = simulate_gemm(
-                    cfg, m, n, k, engine=None if eng == "auto" else eng)
-                wall = time.perf_counter() - t0
-                print(f"{gname} {args.dtype} {mode:7s} "
-                      f"{_fmt(results[eng])}  "
-                      f"[{eng}: wall={wall*1e3:.1f}ms]")
-        else:
-            for eng in engines:
-                t0 = time.perf_counter()
-                results[eng] = replay(cfg, plan, engine=eng,
-                                      footprint_pages=foot_override)
-                wall = time.perf_counter() - t0
-                print(f"{label} {args.dtype} {mode:7s} "
-                      f"{_fmt(results[eng])}  "
-                      f"[{eng}: wall={wall*1e3:.1f}ms "
-                      f"{replayed/max(wall, 1e-9):,.0f} ev/s]")
-        if args.engine == "both":
-            a, b = results["compiled"], results["event"]
-            import dataclasses as _dc
-            for f in _dc.fields(a):
-                va, vb = getattr(a, f.name), getattr(b, f.name)
-                if not (va == vb or (isinstance(va, float) and
-                                     abs(va - vb) <= 1e-9 *
-                                     max(abs(vb), 1e-30))):
-                    raise SystemExit(
-                        f"engine parity violated: {f.name} "
-                        f"compiled={va!r} event={vb!r}")
-            print(f"{gname or label} {mode}: compiled == event "
-                  f"(all GemmResult fields, rtol<=1e-9)")
-        if serve_trace is not None:
-            from repro.serving.sim_report import simulate_serving_trace
-            rep = simulate_serving_trace(cfg, serve_trace, sched=plan)
-            pct = rep.percentiles()
-            print(f"serve {mode:7s} simulated latency: " + "  ".join(
-                f"{k}={pct[k]:.1f}" for k in
-                ("ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
-                 "tpot_p50_us", "tpot_p95_us", "tpot_p99_us")) +
-                f"  requests={pct['requests']}")
+    params = ()
+    if args.gemm:
+        name = "gemm"
+        m, n, k = args.gemm
+        params = as_params(m=m, n=n, k=k)
+    try:
+        target = resolve(name)
+    except UnsupportedScenario as e:
+        ap.error(str(e))
+    if target.kind == "serve":
+        args.dtype = "fp16"        # the engine's KV cache dtype decides
+    sc = Scenario(model=name, dtype=args.dtype, seq=args.seq,
+                  n_layers=args.layers,
+                  sampling="exact" if args.exact else "sampled",
+                  sample_stride=args.sample_stride,
+                  devmem_dram=args.devmem_dram, params=params)
+    _run_modes(sc, args.modes, args.engine)
     return 0
 
 

@@ -1,0 +1,205 @@
+"""Scenario API: registry smoke matrix (every config family lowers and
+replays with event/compiled parity), name resolution errors, the
+SimResult JSON schema, plan-cache sharing, and the heterogeneous
+(zamba2) schedule structure."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core import scenario as SC
+from repro.core.plan import PlanSchedule
+from repro.core.scenario import (Scenario, SimResult,
+                                 UnsupportedScenario, as_params,
+                                 resolve, sampling_error, scenario_names,
+                                 scenario_plan, simulate, smoke_matrix,
+                                 sweep)
+
+MODES = ("DM", "DC", "DevMem")
+
+
+# ------------------------------------------------ registry smoke matrix
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_registry_smoke_reduced(arch):
+    """Every ``configs/*.py`` ``CONFIG.reduced()`` builds a plan via
+    the registry and replays in DM/DC/DevMem with event/compiled
+    parity (asserted inside ``simulate(engine="both")``)."""
+    name = get_reduced(arch).name
+    for mode in MODES:
+        res = simulate(Scenario(model=name, seq=32, mode=mode,
+                                engine="both"))
+        assert res.total_s > 0
+        assert res.events_replayed > 0
+        assert abs(sum(res.buckets().values())) > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_registry_smoke_full_size(arch):
+    """Full-size configs lower and replay too (steady-state sampled,
+    strided, DC only — the stacks are deep and wide)."""
+    name = get_config(arch).name
+    res = simulate(Scenario(model=name, seq=32, mode="DC",
+                            sample_stride=16, engine="compiled"))
+    assert res.total_s > 0
+
+
+def test_unknown_name_did_you_mean():
+    with pytest.raises(UnsupportedScenario) as ei:
+        resolve("zamba2")
+    msg = str(ei.value)
+    assert "did you mean" in msg and "zamba2-7b" in msg
+    assert "KeyError" not in msg
+    # the full valid list is spelled out
+    assert "bert-base" in msg
+
+
+def test_unknown_family_raises_unsupported():
+    cfg = dataclasses.replace(get_reduced("qwen2_0_5b"),
+                              family="quantum")
+    with pytest.raises(UnsupportedScenario) as ei:
+        SC._config_stack(cfg, 32, "int8", 2, 1, SC.PAGE_BYTES)
+    assert "quantum" in str(ei.value)
+    assert "supported families" in str(ei.value)
+
+
+def test_bad_mode_and_engine_raise_unsupported():
+    with pytest.raises(UnsupportedScenario):
+        Scenario(model="bert", mode="HBM")
+    with pytest.raises(UnsupportedScenario):
+        Scenario(model="bert", engine="turbo")
+    with pytest.raises(UnsupportedScenario):
+        Scenario(model="bert", sampling="approximate")
+
+
+def test_scenario_names_cover_zoo_and_classes():
+    names = scenario_names()
+    for expected in ("bert", "vit", "moe", "ssm", "decode", "serve",
+                     "gemm", "bert-base", "zamba2-7b-reduced",
+                     "deepseek-v3-671b"):
+        assert expected in names
+
+
+def test_smoke_matrix_one_per_family():
+    matrix = smoke_matrix()
+    families = set()
+    for sc in matrix[:-1]:         # last entry is the decode class
+        families.add(resolve(sc.model).config.family)
+        assert sc.engine == "both"
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm",
+                        "audio"}
+
+
+# -------------------------------------------- heterogeneous schedules
+def test_zamba2_schedule_one_window_per_class():
+    """The mamba/attention interleave lowers to one steady window per
+    layer CLASS with its own repeat: 4 mamba layers + attn every 2."""
+    plan, label, replayed, total = scenario_plan(
+        Scenario(model="zamba2-7b-reduced", seq=32))
+    assert isinstance(plan, PlanSchedule)
+    reps = {}
+    for p, rep in plan.segments:
+        cls = p.name.split("0.")[0].split(".")[0]
+        for key in ("mamba", "attn"):
+            if key in p.name or any(key in t for t in p.tensors):
+                reps.setdefault(key, set()).add(rep)
+    assert 4 in {r for rs in reps.values() for r in rs}
+    assert 2 in {r for rs in reps.values() for r in rs}
+    assert replayed < total            # sampling actually samples
+
+
+def test_zamba2_exact_interleaves_classes():
+    plan, _, _, _ = scenario_plan(
+        Scenario(model="zamba2-7b-reduced", seq=32, sampling="exact"))
+    names = set()
+    for t in plan.tensors:
+        names.add(t.split(".")[0])
+    # 4 mamba blocks and 2 shared attention blocks, distinct prefixes
+    assert sum(1 for n in names if n.startswith("mamba")) == 4
+    assert sum(1 for n in names if n.startswith("attn")) == 2
+
+
+def test_zamba2_sampling_error_bars():
+    res = sampling_error(Scenario(model="zamba2-7b-reduced", seq=32,
+                                  mode="DC", engine="compiled"))
+    err = res.sampling_error
+    assert err is not None
+    assert err["events_sampled"] < err["events_exact"]
+    # the two-pass schedule replay tracks the exact composed replay
+    assert err["rel_err_total"] < 0.02
+    assert set(err["abs_err_bucket_shares"]) == \
+        set(res.buckets().keys())
+
+
+def test_deepseek_first_dense_layers_honored():
+    """deepseek-v3-reduced has first_dense_layers=1: the 2-layer stack
+    lowers to one dense window + one MoE window."""
+    plan, _, _, _ = scenario_plan(
+        Scenario(model="deepseek-v3-reduced", seq=32))
+    classes = {p.name.split("W.")[0].split(".")[0]
+               for p, _ in plan.segments}
+    tensors = {t for p, _ in plan.segments for t in p.tensors}
+    assert any(t.startswith("dense0.") for t in tensors)
+    assert any(t.startswith("M0.e0.") for t in tensors)  # routed experts
+    assert any(".se." in t for t in tensors)             # shared expert
+
+
+# --------------------------------------------------- façade mechanics
+def test_simresult_json_schema_stable():
+    res = simulate(Scenario(model="qwen2-0.5b-reduced", seq=32))
+    j = res.to_json()
+    assert j["schema"] == "simresult/v1"
+    for key in ("scenario", "label", "mode", "engine", "total_us",
+                "buckets", "tlb", "macs", "gops", "events", "wall_s",
+                "events_per_s", "serving", "sampling_error"):
+        assert key in j, key
+    assert set(j["buckets"]) == {"descriptor", "translation",
+                                 "transfer", "compute", "drain", "host"}
+    assert set(j["tlb"]) == {"lookups", "misses", "walks"}
+    assert set(j["events"]) == {"replayed", "total", "speedup"}
+    json.dumps(j)                      # round-trips
+
+
+def test_sweep_shares_plan_across_modes():
+    SC.clear_caches()
+    sweep([Scenario(model="granite-20b-reduced", seq=32, mode=m)
+           for m in MODES])
+    assert SC.cache_misses == 1        # one lowering ...
+    assert SC.cache_hits == 2          # ... reused by the other modes
+
+
+def test_gemm_scenario_matches_simulate_gemm():
+    """The scenario GEMM path uses the same auto-sampling rule as
+    ``pipeline.simulate_gemm`` — seed GEMM numbers stay pinned."""
+    from repro.accesys.pipeline import simulate_gemm
+    from repro.accesys.system import default_system
+    res = simulate(Scenario(model="gemm", mode="DC",
+                            params=as_params(m=512, n=512, k=512)))
+    ref = simulate_gemm(default_system("DC"), 512, 512, 512)
+    assert res.total_s == pytest.approx(ref.total_s, rel=1e-12)
+    assert res.result.tlb_misses == ref.tlb_misses
+
+
+def test_decode_scenario_no_jax_pools():
+    """The decode class builds from a driver-side PageTable (page ids
+    verbatim); multi-layer sampled lowers to a schedule."""
+    res = simulate(Scenario(model="decode", dtype="fp16",
+                            engine="both"))
+    assert res.events_replayed > 0
+    plan, _, replayed, total = scenario_plan(
+        Scenario(model="decode", dtype="fp16", n_layers=3))
+    assert isinstance(plan, PlanSchedule)
+    assert total == 3 * replayed
+
+
+def test_cli_routes_through_registry(capsys):
+    from repro.launch import simulate as cli
+    with pytest.raises(SystemExit) as ei:
+        cli.main(["--workload", "zamba"])
+    assert ei.value.code == 2
+    err = capsys.readouterr().err
+    assert "did you mean" in err and "zamba2-7b" in err
+    assert cli.main(["--workload", "rwkv6-7b-reduced", "--seq", "32",
+                     "--modes", "DC"]) == 0
+    assert "rwkv6-7b-reduced" in capsys.readouterr().out
