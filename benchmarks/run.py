@@ -19,6 +19,7 @@ MODULES = [
     "bench_kernels",           # Eq. 1 + streaming attention (wall-clock)
     "bench_serving",           # engine throughput + trace replay
     "bench_replay",            # compiled-vs-event engines -> BENCH_replay.json
+    "bench_design_space",      # batched sweep -> BENCH_design_space.json
     "bench_moe_sweep",         # exact MoE expert x capacity sweep
     "bench_sampling_error",    # steady-state sampling error bars
 ]

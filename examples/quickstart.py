@@ -12,7 +12,8 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.configs.base import RunConfig, ShapeConfig
-from repro.core.scenario import Scenario, simulate
+from repro.core.design_space import DesignSpace
+from repro.core.scenario import Scenario, simulate, tune
 from repro.launch.mesh import make_host_mesh
 from repro.runtime.train_loop import Trainer, TrainerConfig
 from repro.serving.engine import Request, ServingEngine
@@ -51,6 +52,19 @@ def main():
         print(f"[simulate] {res.label} {mode:7s} "
               f"total={res.total_s*1e6:8.1f}us "
               f"compute={b['compute']:.1%} host={b['host']:.1%}")
+
+    # co-design search: price a knob space against the workload in one
+    # config-batched replay per plan geometry, Pareto front included
+    space = DesignSpace(sa_w=(8, 16), page_bytes=(4096,),
+                        buffer_kb=(20, 72), tlb_entries=(16, 64),
+                        mode=("DM", "DC", "DevMem"))
+    res = tune(Scenario(model=cfg.name, seq=64), space)
+    best = res.best
+    print(f"[tune] {len(res.points)} points at "
+          f"{res.configs_per_s:.0f} configs/s -> "
+          f"best {best.point.label()} "
+          f"({best.total_s*1e6:.1f}us, "
+          f"{len(res.pareto)} on the latency/area Pareto front)")
 
 
 if __name__ == "__main__":

@@ -156,22 +156,65 @@ DTYPE_BYTES = {"int8": 1, "int16": 2, "int32": 4,
                "fp8": 1, "fp16": 2, "fp32": 4}
 
 
+def sa_variant(dtype: str, w: int) -> tuple:
+    """(freq_hz, area_um2, power_mw, peak_gops) for a W×W array.
+
+    Widths in Table 6 are returned verbatim.  Other widths follow the
+    table's own scaling: frequency is set by the MAC pipeline (the
+    dtype), not the width; peak = 2·W² MACs/cycle; area and power obey
+    the power law the two synthesized points define (log-log
+    interpolation, anchored at W=16 so the paper baseline is exact)."""
+    v = SA_VARIANTS.get((dtype, w))
+    if v is not None:
+        return v
+    lo = SA_VARIANTS[(dtype, 4)]
+    hi = SA_VARIANTS[(dtype, 16)]
+    freq = hi[0]
+
+    def powlaw(a4: float, a16: float) -> float:
+        alpha = math.log(a16 / a4) / math.log(4.0)
+        return a16 * (w / 16.0) ** alpha
+
+    return (freq, powlaw(lo[1], hi[1]), powlaw(lo[2], hi[2]),
+            2.0 * w * w * freq / 1e9)
+
+
 @dataclasses.dataclass(frozen=True)
 class SystolicArray:
+    """MatrixFlow-style output-stationary W×W array.  ``tile_w`` is the
+    row-block size the plan layer streams (``paging.SA_DIM``): an array
+    narrower than the streamed tile sweeps it in ``ceil(tile_w/w)²``
+    output-stationary passes, so pricing a 16-row-tiled plan on an
+    8×8 array honestly charges 4 passes per tile instead of pretending
+    the tile fits."""
     dtype: str = "int8"
     w: int = 16
+    tile_w: int = 16               # streamed tile rows (paging.SA_DIM)
 
     @property
     def freq(self) -> float:
-        return SA_VARIANTS[(self.dtype, self.w)][0]
+        return sa_variant(self.dtype, self.w)[0]
+
+    @property
+    def area_um2(self) -> float:
+        return sa_variant(self.dtype, self.w)[1]
+
+    @property
+    def power_mw(self) -> float:
+        return sa_variant(self.dtype, self.w)[2]
 
     @property
     def peak_gops(self) -> float:
-        return SA_VARIANTS[(self.dtype, self.w)][3]
+        return sa_variant(self.dtype, self.w)[3]
+
+    @property
+    def passes(self) -> int:
+        """Output-stationary sweeps needed per streamed tile."""
+        return (-(-self.tile_w // self.w)) ** 2
 
     def tile_cycles(self, l: int) -> int:
-        """Output-stationary W×W tile over depth l: l + fill/drain."""
-        return l + 2 * (self.w - 1)
+        """One streamed tile over depth l: passes × (l + fill/drain)."""
+        return self.passes * (l + 2 * (self.w - 1))
 
     def tile_time(self, l: int) -> float:
         return self.tile_cycles(l) / self.freq

@@ -91,12 +91,18 @@ class Scenario:
     sample_stride: int = 1         # stride GEMM inner loops of windows
     engine: str = "auto"           # auto | event | compiled | both
     devmem_dram: str = "HBM2"      # DRAM tech for DevMem mode
+    page_bytes: int = PAGE_BYTES   # streaming page/tile granularity
     params: tuple = ()             # workload-class overrides (as_params)
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise UnsupportedScenario(
                 f"unknown memory mode {self.mode!r}; valid: {MODES}")
+        if self.page_bytes < 256 or \
+                self.page_bytes & (self.page_bytes - 1):
+            raise UnsupportedScenario(
+                f"page_bytes must be a power of two >= 256, got "
+                f"{self.page_bytes}")
         if self.dtype not in plan_ir.ELEM_BYTES:
             raise UnsupportedScenario(
                 f"unknown dtype {self.dtype!r}; valid: "
@@ -671,13 +677,25 @@ def clear_caches():
     """Drop cached plans/serving traces (exact full-depth plans plus
     their compiled arrays are order-100 MB)."""
     global cache_hits, cache_misses
+    from repro.accesys.pipeline import _SCRATCH_POOL
     _PLAN_CACHE.clear()
     _TRACE_CACHE.clear()
+    _SCRATCH_POOL.clear()
     cache_hits = cache_misses = 0
+
+
+def _cache_get(cache: OrderedDict, key):
+    """LRU read: a hit refreshes recency, so an interleaved sweep
+    cannot evict its own hot plan."""
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+    return hit
 
 
 def _cache_put(cache: OrderedDict, maxsize: int, key, value):
     cache[key] = value
+    cache.move_to_end(key)     # overwriting an old key refreshes it too
     while len(cache) > maxsize:
         cache.popitem(last=False)
 
@@ -686,7 +704,7 @@ def _plan_key(sc: Scenario) -> tuple:
     # mode / engine / devmem_dram excluded: a DM/DC/DevMem (or
     # engine-parity) sweep reuses one plan and its compiled form
     return (sc.model, sc.dtype, sc.seq, sc.batch, sc.n_layers,
-            sc.sampling, sc.sample_stride, sc.params)
+            sc.sampling, sc.sample_stride, sc.page_bytes, sc.params)
 
 
 def _decode_table(p: dict, np_dt: str):
@@ -740,19 +758,21 @@ def _build_plan(sc: Scenario, target: _Target):
         S = (sc.seq or target.default_seq) * sc.batch
         n_layers = sc.n_layers or cfg.n_layers
         stack = _config_stack(cfg, S, sc.dtype, n_layers, ss,
-                              PAGE_BYTES)
+                              sc.page_bytes)
         plan = _stack_plan(cfg.name, stack, exact)
     elif target.kind == "gemm":
         from repro.core.streaming import tile_counts
         sh = _merge_params("gemm", dict(m=1024, n=1024, k=1024), p)
         m, n, k = sh["m"], sh["n"], sh["k"]
         np_name = plan_ir.np_dtype_for(sc.dtype)
-        counts = tile_counts(m, n, k, np_name, page_bytes=PAGE_BYTES)
+        counts = tile_counts(m, n, k, np_name,
+                             page_bytes=sc.page_bytes)
         # same auto-sampling rule as pipeline.simulate_gemm, so the
         # pinned seed GEMM numbers hold through this path too
         stride = 1 if exact else \
             max(ss, counts["inner_steps"] // 400_000, 1)
         plan = plan_ir.gemm_plan_cached(m, n, k, np_name,
+                                        page_bytes=sc.page_bytes,
                                         sample_stride=stride)
     elif target.kind == "moe":
         sh = _merge_params("moe", MOE_SHAPE, p)
@@ -763,14 +783,15 @@ def _build_plan(sc: Scenario, target: _Target):
                     sh["n_tokens"], sh["d_model"], sh["n_experts"],
                     sh["top_k"], sh["d_ff"], sc.dtype,
                     capacity_factor=sh["capacity_factor"], layer=i,
-                    x="x" if i == 0 else f"M{i-1}.out")
+                    x="x" if i == 0 else f"M{i-1}.out",
+                    page_bytes=sc.page_bytes)
                  for i in range(n_layers)], name=f"moe_x{n_layers}")
         else:
             plan = plan_ir.moe_schedule(
                 sh["n_tokens"], sh["d_model"], sh["n_experts"],
                 sh["top_k"], sh["d_ff"], n_layers, sc.dtype,
                 capacity_factor=sh["capacity_factor"],
-                sample_stride=ss)
+                page_bytes=sc.page_bytes, sample_stride=ss)
     elif target.kind == "ssm":
         sh = _merge_params("ssm", SSM_SHAPE, p)
         n_layers = sc.n_layers or 2
@@ -779,12 +800,14 @@ def _build_plan(sc: Scenario, target: _Target):
                 [plan_ir.ssm_layer_plan(
                     sh["T"], sh["d_model"], sh["n_heads"], sc.dtype,
                     chunk=sh["chunk"], layer=i,
-                    x="x" if i == 0 else f"S{i-1}.out")
+                    x="x" if i == 0 else f"S{i-1}.out",
+                    page_bytes=sc.page_bytes)
                  for i in range(n_layers)], name=f"ssm_x{n_layers}")
         else:
             plan = plan_ir.ssm_schedule(
                 sh["T"], sh["d_model"], sh["n_heads"], n_layers,
-                sc.dtype, chunk=sh["chunk"], sample_stride=ss)
+                sc.dtype, chunk=sh["chunk"],
+                page_bytes=sc.page_bytes, sample_stride=ss)
     elif target.kind == "decode":
         sh = _merge_params("decode", DECODE_SHAPE, p)
         np_dt = plan_ir.np_dtype_for(sc.dtype)
@@ -814,10 +837,9 @@ def _build_plan(sc: Scenario, target: _Target):
 def _plan_for(sc: Scenario, target: _Target):
     global cache_hits, cache_misses
     key = _plan_key(sc)
-    hit = _PLAN_CACHE.get(key)
+    hit = _cache_get(_PLAN_CACHE, key)
     if hit is not None:
         cache_hits += 1
-        _PLAN_CACHE.move_to_end(key)
         return hit
     cache_misses += 1
     built = _build_plan(sc, target)
@@ -832,10 +854,9 @@ def _serve_trace(sc: Scenario):
     global cache_hits, cache_misses
     sh = _merge_params("serve", SERVE_SHAPE, sc.param_dict())
     key = tuple(sorted(sh.items()))
-    hit = _TRACE_CACHE.get(key)
+    hit = _cache_get(_TRACE_CACHE, key)
     if hit is not None:
         cache_hits += 1
-        _TRACE_CACHE.move_to_end(key)
         return hit
     cache_misses += 1
     import jax
@@ -881,7 +902,12 @@ def system_for(sc: Scenario):
     from repro.accesys.system import default_system
     dtype = "fp16" if resolve(sc.model).kind == "serve" else sc.dtype
     dram = DRAM(sc.devmem_dram) if sc.mode == "DevMem" else None
-    return default_system(sc.mode, dtype=dtype, dram=dram)
+    cfg = default_system(sc.mode, dtype=dtype, dram=dram)
+    if sc.page_bytes != cfg.page_bytes:
+        cfg.page_bytes = sc.page_bytes
+        cfg.llc = dataclasses.replace(cfg.llc,
+                                      page_bytes=sc.page_bytes)
+    return cfg
 
 
 def scenario_plan(sc: Scenario):
@@ -969,6 +995,137 @@ def sweep(scenarios: Sequence[Scenario], *,
     cache — the paper's design-space sweeps in one call."""
     return [simulate(sc, host_s_per_elem=host_s_per_elem)
             for sc in scenarios]
+
+
+# ========================================================= design search
+@dataclasses.dataclass
+class TunedPoint:
+    """One scored design-space candidate."""
+    point: object                  # design_space.DesignPoint
+    result: object                 # accesys GemmResult
+    area_um2: float                # accelerator-silicon area proxy
+    score: float                   # objective value (lower is better)
+    on_pareto: bool = False        # latency-vs-area non-dominated
+
+    @property
+    def total_s(self) -> float:
+        return self.result.total_s
+
+    def to_json(self) -> dict:
+        return {"point": dataclasses.asdict(self.point),
+                "label": self.point.label(),
+                "total_us": self.total_s * 1e6,
+                "area_mm2": self.area_um2 / 1e6,
+                "score": self.score,
+                "on_pareto": self.on_pareto}
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """Result of one ``tune()`` search: every scored point (input
+    order), the latency-vs-area Pareto frontier, and the sweep
+    throughput the config-batched replayer achieved."""
+    scenario: Scenario
+    objective: str
+    points: list                   # [TunedPoint]
+    n_infeasible: int              # filtered before pricing
+    wall_s: float
+
+    SCHEMA = "tuneresult/v1"
+
+    @property
+    def pareto(self) -> list:
+        return [tp for tp in self.points if tp.on_pareto]
+
+    @property
+    def best(self) -> TunedPoint:
+        return min(self.points, key=lambda tp: tp.score)
+
+    @property
+    def configs_per_s(self) -> float:
+        return len(self.points) / max(self.wall_s, 1e-9)
+
+    def to_json(self) -> dict:
+        return {"schema": self.SCHEMA,
+                "scenario": self.scenario.to_json(),
+                "objective": self.objective,
+                "n_points": len(self.points),
+                "n_infeasible": self.n_infeasible,
+                "wall_s": round(self.wall_s, 6),
+                "configs_per_s": round(self.configs_per_s, 1),
+                "best": self.best.to_json(),
+                "pareto": [tp.to_json() for tp in self.pareto],
+                "points": [tp.to_json() for tp in self.points]}
+
+
+def tune(sc: Scenario, space=None, objective="latency", *,
+         host_s_per_elem: Optional[float] = None) -> TuneResult:
+    """Search a co-design knob space against one workload: lower ``sc``
+    once per distinct (dtype, page_bytes) — those change the plan — and
+    price every ``DesignPoint`` of each group in ONE config-batched
+    replay (``replay_batch``), so an N-point sweep costs one trace
+    analysis plus a vectorized pricing pass instead of N replays.
+
+    ``space`` is a ``design_space.DesignSpace`` (default:
+    ``default_space()``) or an explicit iterable of ``DesignPoint``s;
+    infeasible points (buffer budget too small for the streaming
+    schedule) are filtered and counted.  ``objective`` is ``"latency"``
+    or a callable ``(point, result) -> float`` (lower is better); the
+    latency-vs-area Pareto frontier is marked regardless of objective.
+    Per-point results equal a sequential ``simulate()`` of the same
+    configuration at rtol 1e-9 — DM/DC/DevMem orderings match
+    ``sweep()``."""
+    from repro.accesys.pipeline import HOST_S_PER_ELEM, replay_batch
+    from repro.core import design_space as DS
+    target = resolve(sc.model)
+    if target.kind == "serve":
+        raise UnsupportedScenario(
+            "tune() prices plan/schedule scenarios; serve traces have "
+            "per-request semantics — sweep() them per config instead")
+    if space is None:
+        space = DS.default_space()
+    pts = list(space.grid()) if isinstance(space, DS.DesignSpace) \
+        else [p.canonical() for p in space]
+    n_bad = sum(1 for p in pts if not p.feasible)
+    pts = [p for p in pts if p.feasible]
+    if not pts:
+        raise UnsupportedScenario(
+            "design space has no feasible points (buffer_kb below "
+            "every point's required_buffer_kb)")
+    if callable(objective):
+        score_fn = objective
+        obj_name = getattr(objective, "__name__", "custom")
+    elif objective == "latency":
+        def score_fn(point, r):
+            return r.total_s
+        obj_name = "latency"
+    else:
+        raise UnsupportedScenario(
+            f"unknown tune objective {objective!r}; valid: 'latency' "
+            "or a callable (point, result) -> float")
+    t0 = time.perf_counter()
+    groups: "OrderedDict[tuple, list]" = OrderedDict()
+    for i, p in enumerate(pts):
+        groups.setdefault((p.dtype, p.page_bytes), []).append(i)
+    scored: list = [None] * len(pts)
+    for (dt, pb), idxs in groups.items():
+        plan, _, _, _ = _plan_for(
+            dataclasses.replace(sc, dtype=dt, page_bytes=pb), target)
+        cfgs = [DS.system_for_point(pts[i]) for i in idxs]
+        results = replay_batch(
+            cfgs, plan,
+            host_s_per_elem=host_s_per_elem or HOST_S_PER_ELEM)
+        for i, r in zip(idxs, results):
+            scored[i] = TunedPoint(
+                point=pts[i], result=r,
+                area_um2=DS.point_area_um2(pts[i]),
+                score=score_fn(pts[i], r))
+    wall = time.perf_counter() - t0
+    for i in DS.pareto_front((tp.total_s, tp.area_um2)
+                             for tp in scored):
+        scored[i].on_pareto = True
+    return TuneResult(scenario=sc, objective=obj_name, points=scored,
+                      n_infeasible=n_bad, wall_s=wall)
 
 
 def sampling_error(sc: Scenario, *,

@@ -7,6 +7,7 @@ API (``core.scenario``).
     PYTHONPATH=src python -m repro.launch.simulate --workload serve
     PYTHONPATH=src python -m repro.launch.simulate --list
     PYTHONPATH=src python -m repro.launch.simulate --smoke
+    PYTHONPATH=src python -m repro.launch.simulate --model bert-base --tune
 
 ``--workload`` (and its historical alias ``--model``) accepts ANY name
 from the scenario registry: every ``configs/*.py`` ``ModelConfig``
@@ -23,6 +24,12 @@ separately); ``--exact`` materializes the full composed event graph.
 loop and asserts every result field agrees to rtol 1e-9.  ``--smoke``
 runs the registry-generated CI matrix: one reduced scenario per model
 family, engine parity on each.
+
+``--tune`` searches the co-design knob space (``core.design_space``)
+against the selected workload instead of replaying a single system:
+every feasible point is priced with the config-batched replayer and
+the latency-vs-area Pareto frontier is printed.  ``--tune-points N``
+random-samples the space instead of enumerating the full grid.
 """
 from __future__ import annotations
 
@@ -84,6 +91,38 @@ def _run_modes(sc: Scenario, modes, engine: str) -> None:
                   f"event (all GemmResult fields, rtol<=1e-9)")
 
 
+def _run_tune(sc: Scenario, n_points) -> int:
+    """Price the co-design knob space against one workload and print
+    the scored points, the latency-vs-area Pareto frontier and the
+    batched-pricing throughput."""
+    from repro.core.design_space import default_space
+    from repro.core.scenario import tune
+
+    space = default_space()
+    points = space.sample(n_points, seed=0) \
+        if n_points is not None else space
+    res = tune(sc, points)
+    print(f"tune {res.scenario.model} ({res.scenario.sampling}): "
+          f"{len(res.points)} points scored in {res.wall_s:.2f}s "
+          f"({res.configs_per_s:,.0f} configs/s, "
+          f"{res.n_infeasible} infeasible filtered)")
+    best = res.best
+    shown = sorted(res.points, key=lambda tp: tp.score)[:10]
+    for tp in shown:
+        mark = "*" if tp is best else " "
+        front = "pareto" if tp.on_pareto else "      "
+        print(f" {mark} {front} {tp.point.label():44s} "
+              f"total={tp.total_s * 1e6:9.1f}us "
+              f"area={tp.area_um2 / 1e6:6.2f}mm2 "
+              f"score={tp.score:.4g}")
+    n_more = len(res.points) - len(shown)
+    if n_more > 0:
+        print(f"   ... {n_more} more points (lowest 10 scores shown)")
+    print(f"pareto frontier: {len(res.pareto)} points; "
+          f"best ({res.objective}): {best.point.label()}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", metavar="SCENARIO",
@@ -116,6 +155,13 @@ def main(argv=None) -> int:
                     choices=["auto", "event", "compiled", "both"],
                     help="replayer: compiled array engine vs Python "
                          "event loop ('both' checks parity)")
+    ap.add_argument("--tune", action="store_true",
+                    help="design-space search (core.design_space) over "
+                         "the workload: batched pricing + Pareto front")
+    ap.add_argument("--tune-points", type=int, default=None,
+                    metavar="N",
+                    help="random-sample the space to N points instead "
+                         "of the full grid (seeded, deterministic)")
     ap.add_argument("--devmem-dram", default="HBM2",
                     help="DRAM tech for DevMem mode (paper Fig. 12)")
     args = ap.parse_args(argv)
@@ -137,6 +183,11 @@ def main(argv=None) -> int:
         ap.error("--layers must be >= 1")
     if args.sample_stride < 1:
         ap.error("--sample-stride must be >= 1")
+    if args.tune_points is not None:
+        if not args.tune:
+            ap.error("--tune-points requires --tune")
+        if args.tune_points < 1:
+            ap.error("--tune-points must be >= 1")
 
     params = ()
     if args.gemm:
@@ -154,6 +205,8 @@ def main(argv=None) -> int:
                   sampling="exact" if args.exact else "sampled",
                   sample_stride=args.sample_stride,
                   devmem_dram=args.devmem_dram, params=params)
+    if args.tune:
+        return _run_tune(sc, args.tune_points)
     _run_modes(sc, args.modes, args.engine)
     return 0
 

@@ -1,0 +1,324 @@
+"""Config-batched pricing + design-space search.
+
+The contract under test: ``replay_batch(cfgs, plan)`` returns, per
+config, the SAME GemmResult a sequential ``replay_compiled`` sweep
+produces (rtol <= 1e-9 on every field, over random plans x random
+``SystemConfig`` batches), and ``tune()`` searches a knob space whose
+paper point lowers to the exact default system — so the co-design
+frontier is priced by the same numbers every other test pins.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.accesys import components as C
+from repro.accesys.pipeline import (SystemConfig, replay_batch,
+                                    replay_compiled)
+from repro.accesys.system import default_system
+from repro.core import design_space as DS
+from repro.core import plan as P
+from repro.core import scenario as SC
+from repro.core.scenario import Scenario, as_params, simulate, tune
+
+from test_compiled_replay import _random_plan
+
+MODES = ("DM", "DC", "DevMem")
+
+
+def _random_cfg(rng) -> SystemConfig:
+    return SystemConfig(
+        sa=C.SystolicArray(
+            dtype="int8", w=int(rng.choice([4, 8, 16, 32]))),
+        pcie=C.PCIeLink(lanes=int(rng.choice([4, 8, 16])),
+                        gbps_per_lane=float(rng.choice([8, 16, 32,
+                                                        64]))),
+        dram=C.DRAM(str(rng.choice(list(C.DRAM_TECH)))),
+        dma=C.DMAEngine(read_channels=int(rng.integers(1, 4)),
+                        doorbell_ns=float(rng.choice([400, 800]))),
+        smmu=C.SMMU(tlb_entries=int(rng.choice([2, 16, 64])),
+                    l2_entries=int(rng.choice([64, 8192]))),
+        llc=C.LLC(size_bytes=int(rng.choice([64, 512, 2048])) * 1024),
+        mode=str(rng.choice(MODES)))
+
+
+def assert_batch_parity(cfgs, plan, rtol=1e-9, **kw):
+    batch = replay_batch(cfgs, plan, **kw)
+    assert len(batch) == len(cfgs)
+    for cfg, got in zip(cfgs, batch):
+        # force the vectorized recurrence: replay_batch's pricing is
+        # its leading-axis form, so parity is bitwise, not just rtol
+        ref = replay_compiled(dataclasses.replace(cfg), plan,
+                              _recur="vec")
+        for f in dataclasses.fields(ref):
+            a, b = getattr(ref, f.name), getattr(got, f.name)
+            if isinstance(a, int):
+                assert a == b, (f.name, a, b)
+            else:
+                assert b == pytest.approx(a, rel=rtol, abs=1e-30), \
+                    (f.name, a, b)
+
+
+# ------------------------------------------------- batched == sequential
+@pytest.mark.parametrize("wl,build", [
+    ("gemm", lambda: P.gemm_plan(192, 160, 512, "int8")),
+    ("bert", lambda: P.model_plan(32, 64, 2, 256, 2, "int8")),
+    ("moe", lambda: P.moe_layer_plan(64, 128, 8, 2, 256, "int8")),
+    ("ssm", lambda: P.ssm_layer_plan(128, 128, 4, "int8", chunk=16)),
+])
+def test_builder_plans_batch_parity(wl, build):
+    rng = np.random.default_rng(hash(wl) % 2**32)
+    cfgs = [default_system(m) for m in MODES] + \
+        [_random_cfg(rng) for _ in range(8)]
+    assert_batch_parity(cfgs, build())
+
+
+@pytest.mark.parametrize("wl,build", [
+    ("bert", lambda: P.model_schedule(32, 64, 2, 256, 3, "int8")),
+    ("gemm", lambda: P.gemm_plan(512, 512, 512, "int8",
+                                 sample_stride=3)),
+    ("moe", lambda: P.moe_schedule(64, 128, 8, 2, 256, 4, "int8")),
+])
+def test_builder_schedules_batch_parity(wl, build):
+    rng = np.random.default_rng(hash(wl) % 2**31)
+    cfgs = [default_system(m) for m in MODES] + \
+        [_random_cfg(rng) for _ in range(8)]
+    assert_batch_parity(cfgs, build())
+
+
+def test_random_plans_random_config_batches():
+    rng = np.random.default_rng(21)
+    for _ in range(15):
+        plan = _random_plan(rng)
+        cfgs = [_random_cfg(rng)
+                for _ in range(int(rng.integers(1, 9)))]
+        assert_batch_parity(cfgs, plan)
+
+
+def test_random_schedules_random_config_batches():
+    rng = np.random.default_rng(23)
+    for _ in range(8):
+        segs = [(_random_plan(rng), int(rng.integers(1, 5)))
+                for _ in range(int(rng.integers(1, 4)))]
+        sched = P.PlanSchedule("random_sched", segs)
+        cfgs = [_random_cfg(rng)
+                for _ in range(int(rng.integers(1, 7)))]
+        assert_batch_parity(cfgs, sched)
+
+
+def test_chunked_batches_match_unchunked():
+    """Tiny max_chunk_elems forces many recurrence chunks; results must
+    not change."""
+    rng = np.random.default_rng(29)
+    plan = P.model_plan(32, 64, 2, 256, 2, "int8")
+    sched = P.model_schedule(32, 64, 2, 256, 3, "int8")
+    cfgs = [_random_cfg(rng) for _ in range(9)]
+    for pl in (plan, sched):
+        assert_batch_parity(cfgs, pl, max_chunk_elems=1)
+
+
+def test_duplicate_configs_share_one_replay():
+    """Equal-keyed configs must return equal (deduped) results, and
+    distinct GemmResult objects per slot."""
+    plan = P.gemm_plan(192, 160, 512, "int8")
+    cfgs = [default_system("DC"), default_system("DC"),
+            default_system("DM"), default_system("DC")]
+    out = replay_batch(cfgs, plan)
+    assert out[0] == out[1] == out[3]
+    assert out[0] is not out[1]
+    assert out[2] != out[0]
+
+
+def test_replay_batch_is_pure():
+    """Unlike the sequential entry points, batched pricing never
+    touches the configs' SMMU/LLC state or counters."""
+    plan = P.gemm_plan(96, 96, 256, "int8")
+    cfg = default_system("DC")
+    replay_batch([cfg], plan)
+    assert cfg.smmu.lookups == 0 and not cfg.smmu._tlb
+    assert cfg.llc.hits == cfg.llc.misses == 0 and not cfg.llc._lru
+    assert replay_batch([], plan) == []
+
+
+# -------------------------------------------------- SA variant modeling
+def test_sa_pass_model():
+    for w, passes in ((4, 16), (8, 4), (16, 1), (32, 1)):
+        sa = C.SystolicArray(dtype="int8", w=w, tile_w=16)
+        assert sa.passes == passes
+    # seed numbers: default 16x16 over depth 256 stays 256 + 2*15
+    assert C.SystolicArray().tile_cycles(256) == 286
+    assert C.SystolicArray(w=8).tile_cycles(256) == 4 * (256 + 14)
+
+
+def test_sa_variant_interpolation():
+    # table anchors pass through verbatim
+    assert C.sa_variant("int8", 16) == C.SA_VARIANTS[("int8", 16)]
+    assert C.sa_variant("int8", 4) == C.SA_VARIANTS[("int8", 4)]
+    # interpolated widths: peak throughput scales as 2 w^2 f
+    f8, area8, pow8, gops8 = C.sa_variant("int8", 8)
+    assert gops8 == pytest.approx(2 * 8 * 8 * f8 / 1e9)
+    areas = [C.sa_variant("int8", w)[1] for w in (4, 8, 16, 32)]
+    powers = [C.sa_variant("int8", w)[2] for w in (4, 8, 16, 32)]
+    assert areas == sorted(areas) and powers == sorted(powers)
+    # the log-log law hits both anchors
+    assert C.sa_variant("fp16", 32)[1] > C.SA_VARIANTS[("fp16", 16)][1]
+
+
+# ------------------------------------------------------ knob space model
+def test_default_point_is_the_paper_system():
+    p = DS.DesignPoint()
+    assert (p.sa_w, p.page_bytes) == (16, 4096)
+    assert 18.0 <= p.required_buffer_kb <= p.buffer_kb == 20
+    assert DS.system_for_point(p) == default_system("DC")
+
+
+def test_paper_point_in_default_grid():
+    grid = list(DS.default_space().grid())
+    assert DS.DesignPoint() in grid
+    assert all(p.feasible for p in grid)
+    # canonicalization dedups don't-care axes
+    assert len(grid) == len(set(grid))
+    dm = DS.DesignPoint(mode="DM", llc_kb=64, devmem_dram="GDDR6")
+    assert dm.canonical() == DS.DesignPoint(mode="DM")
+
+
+def test_infeasible_points_filtered():
+    tiny = DS.DesignPoint(page_bytes=16384, buffer_kb=20)
+    assert not tiny.feasible
+    assert tiny not in list(DS.default_space().grid())
+    space = DS.DesignSpace(page_bytes=(16384,), buffer_kb=(20,))
+    assert space.size() == 0
+    with pytest.raises(SC.UnsupportedScenario):
+        tune(Scenario(model="gemm"), space)
+
+
+def test_sample_is_deterministic_and_feasible():
+    space = DS.default_space()
+    a = space.sample(12, seed=3)
+    assert a == space.sample(12, seed=3)
+    assert len(a) == len(set(a)) == 12
+    assert all(p.feasible for p in a)
+
+
+def test_bench_grid_shape():
+    grid = DS.bench_grid()
+    assert len(grid) == 64
+    assert len({DS.system_for_point(p).sa.w for p in grid}) == 4
+    assert all(p.feasible and p.page_bytes == 4096 for p in grid)
+
+
+def test_pareto_front_non_dominated():
+    pts = [(1.0, 5.0), (2.0, 3.0), (3.0, 4.0), (0.5, 9.0),
+           (2.5, 3.0), (4.0, 1.0)]
+    keep = DS.pareto_front(pts)
+    assert keep == [0, 1, 3, 5]
+    for i in keep:
+        t, a = pts[i]
+        assert not any((t2 <= t and a2 <= a) and (t2 < t or a2 < a)
+                       for j, (t2, a2) in enumerate(pts) if j != i)
+
+
+# ------------------------------------------------------------- tune()
+def test_tune_matches_sweep_mode_ordering():
+    """The mode axis of tune() reproduces simulate()/sweep() values at
+    rtol 1e-9 — DM/DC/DevMem ordering cannot disagree."""
+    SC.clear_caches()
+    sc = Scenario(model="gemm", params=as_params(m=256, n=256, k=256))
+    res = tune(sc, [DS.DesignPoint(mode=m) for m in MODES])
+    totals = {}
+    for tp, mode in zip(res.points, MODES):
+        ref = simulate(dataclasses.replace(sc, mode=mode))
+        assert tp.total_s == pytest.approx(ref.total_s, rel=1e-9)
+        totals[mode] = tp.total_s
+    order = sorted(MODES, key=totals.get)
+    ref_order = sorted(MODES, key=lambda m: simulate(
+        dataclasses.replace(sc, mode=m)).total_s)
+    assert order == ref_order
+
+
+def test_tune_smoke_grid():
+    sc = Scenario(model="qwen2-0.5b-reduced", seq=32)
+    space = DS.DesignSpace(sa_w=(8, 16), page_bytes=(4096,),
+                           buffer_kb=(20, 72), tlb_entries=(16, 64),
+                           mode=("DC", "DevMem"))
+    res = tune(sc, space)
+    assert DS.DesignPoint() in [tp.point for tp in res.points]
+    assert res.n_infeasible == 0
+    assert len(res.points) == space.size()
+    best = res.best
+    assert best.score == min(tp.score for tp in res.points)
+    # the frontier is mutually non-dominated and contains the fastest
+    front = res.pareto
+    assert front
+    assert min(tp.total_s for tp in front) == \
+        min(tp.total_s for tp in res.points)
+    for tp in front:
+        assert not any(
+            (o.total_s <= tp.total_s and o.area_um2 <= tp.area_um2)
+            and (o.total_s < tp.total_s or o.area_um2 < tp.area_um2)
+            for o in res.points if o is not tp)
+    j = res.to_json()
+    assert j["schema"] == "tuneresult/v1"
+    import json
+    json.dumps(j)
+
+
+def test_tune_custom_objective_and_serve_rejected():
+    sc = Scenario(model="gemm", params=as_params(m=256, n=256, k=256))
+    pts = [DS.DesignPoint(sa_w=w, buffer_kb=72) for w in (8, 16)]
+
+    def area_latency(point, r):
+        return r.total_s * DS.point_area_um2(point)
+
+    res = tune(sc, pts, objective=area_latency)
+    assert res.objective == "area_latency"
+    assert res.best.score == min(tp.score for tp in res.points)
+    with pytest.raises(SC.UnsupportedScenario):
+        tune(Scenario(model="serve"))
+    with pytest.raises(SC.UnsupportedScenario):
+        tune(sc, pts, objective="throughput")
+
+
+# ---------------------------------------------- scenario page_bytes knob
+def test_scenario_page_bytes_threads_to_plan_and_llc():
+    SC.clear_caches()
+    a = simulate(Scenario(model="qwen2-0.5b-reduced", seq=32))
+    b = simulate(Scenario(model="qwen2-0.5b-reduced", seq=32,
+                          page_bytes=1024))
+    assert SC.cache_misses == 2        # distinct plans per page size
+    assert a.total_s != b.total_s
+    cfg = SC.system_for(Scenario(model="gemm", page_bytes=1024))
+    assert cfg.page_bytes == 1024 and cfg.llc.page_bytes == 1024
+    with pytest.raises(SC.UnsupportedScenario):
+        Scenario(model="gemm", page_bytes=100)
+
+
+# ------------------------------------------------------- true-LRU cache
+def test_plan_cache_is_true_lru():
+    from collections import OrderedDict
+    cache: OrderedDict = OrderedDict()
+    for k in "abc":
+        SC._cache_put(cache, 3, k, k.upper())
+    assert SC._cache_get(cache, "a") == "A"   # refreshes recency
+    SC._cache_put(cache, 3, "d", "D")         # evicts b, not a
+    assert list(cache) == ["c", "a", "d"]
+    SC._cache_put(cache, 3, "c", "C2")        # overwrite refreshes too
+    SC._cache_put(cache, 3, "e", "E")
+    assert list(cache) == ["d", "c", "e"]
+    assert SC._cache_get(cache, "zz") is None
+
+
+def test_interleaved_sweep_keeps_hot_plan():
+    """A mode sweep interleaved with other scenarios must keep hitting
+    its own plan: LRU recency refresh on every hit."""
+    SC.clear_caches()
+    hot = Scenario(model="qwen2-0.5b-reduced", seq=32)
+    fillers = [Scenario(model="gemm",
+                        params=as_params(m=64 * (i + 1), n=64, k=64))
+               for i in range(SC._PLAN_CACHE_MAX - 1)]
+    simulate(hot)
+    for i, f in enumerate(fillers):
+        simulate(f)
+        simulate(hot)                  # refresh between evict pressure
+    assert SC.cache_misses == 1 + len(fillers)
+    assert SC.cache_hits == len(fillers)
