@@ -20,6 +20,8 @@ MODULES = [
     "bench_serving",           # engine throughput + trace replay
     "bench_replay",            # compiled-vs-event engines -> BENCH_replay.json
     "bench_design_space",      # batched sweep -> BENCH_design_space.json
+    "bench_serving_scale",     # streamed 1k/10k open-loop traces ->
+    #                            BENCH_serving_scale.json
     "bench_moe_sweep",         # exact MoE expert x capacity sweep
     "bench_sampling_error",    # steady-state sampling error bars
 ]

@@ -134,6 +134,53 @@ def _rebuild_lru_state(od, mru, keys, cap):
     for pid in mru[-cap:].tolist():
         od[keys[pid]] = True
 
+
+def _mru_of(ids):
+    """Distinct ids of ``ids`` ordered LRU -> MRU (oldest last touch
+    first) — the complete LRU state any capacity's stack leaves behind."""
+    if ids.size == 0:
+        return np.empty(0, ids.dtype)
+    uniq, ridx = np.unique(ids[::-1], return_index=True)
+    return uniq[np.argsort(ids.size - 1 - ridx)]
+
+
+class LRUStreamState:
+    """Resumable exact LRU analysis for a trace processed in chunks.
+
+    Carries the distinct ids seen so far in LRU->MRU order.  For each
+    chunk, the carried ids are prefix-replayed in front of the chunk
+    (one access each, oldest first): any chunk access whose previous
+    occurrence falls before the chunk start then hits its carried id at
+    exactly the stack distance the monolithic trace would have produced
+    (the carried prefix IS the LRU stack at the chunk boundary, so the
+    distinct-ids-since-last-touch count is preserved for EVERY
+    capacity at once).  First-ever accesses keep ``prev == -1``.  The
+    per-chunk ``(prev, sd)`` slices are therefore bitwise-equal to the
+    corresponding slices of a single whole-trace analysis wherever a
+    consumer tests ``(prev >= 0) & (sd < capacity)`` — prev indices
+    that point into the replayed prefix stay ``>= 0``, which is all the
+    hit/miss masks ever read.
+
+    The empty-carry path returns the chunk's own arrays unmodified, so
+    a single-chunk stream is literally the monolithic computation.
+    """
+
+    __slots__ = ("mru",)
+
+    def __init__(self):
+        self.mru = np.empty(0, np.int64)
+
+    def analyze(self, ids):
+        """(prev, sd) for ``ids`` as the monolithic trace would see
+        them; advances the carried LRU state past this chunk."""
+        m = int(self.mru.size)
+        ext = ids if m == 0 else \
+            np.concatenate([self.mru.astype(ids.dtype, copy=False), ids])
+        prev = prev_occurrence(ext)
+        sd = lru_stack_distances(prev)
+        self.mru = _mru_of(ext)
+        return (prev, sd) if m == 0 else (prev[m:], sd[m:])
+
 # ----------------------------------------------------------------- SA
 # Table 6 (post-synthesis PPA; fixed-point @1 GHz, floating @0.6 GHz)
 SA_VARIANTS = {

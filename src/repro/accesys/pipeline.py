@@ -24,8 +24,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.accesys.components import (DMAEngine, DRAM, LLC, PCIeLink,
-                                      SMMU, SystolicArray,
+from repro.accesys.components import (DMAEngine, DRAM, LLC, LRUStreamState,
+                                      PCIeLink, SMMU, SystolicArray,
                                       _lru_trace_memo)
 from repro.core import plan as P
 from repro.core import streaming
@@ -406,13 +406,27 @@ def _grp_starts(cp) -> np.ndarray:
     return gs
 
 
+def _seg_sum(v: np.ndarray, s: np.ndarray, e: np.ndarray) -> np.ndarray:
+    """Per-segment sums of ``v`` over contiguous tiling segments
+    ``[s[i], e[i])``.  Each segment is reduced left-to-right over its
+    OWN elements only (``np.add.reduceat``), matching the event loop's
+    per-group ``sum`` — and, unlike a diff-of-prefix-cumsum, the value
+    of a segment does not depend on anything outside it, so a trace
+    priced in chunks produces bitwise the same per-op sums as the
+    monolithic pass."""
+    out = np.zeros(s.size)
+    ne = np.nonzero(e > s)[0]
+    if ne.size:
+        # non-empty segments tile v exactly (empties have s == e), so
+        # reduceat over their starts reduces each segment in isolation
+        out[ne] = np.add.reduceat(v, s[ne])
+    return out
+
+
 def _gsum(cp, v: np.ndarray) -> np.ndarray:
     """Sum of the per-access quantity ``v`` over each op's drain
     group."""
-    c = np.empty(v.size + 1)
-    c[0] = 0.0
-    np.cumsum(v, out=c[1:])
-    return c[cp.grp_end] - c[_grp_starts(cp)]
+    return _seg_sum(v, _grp_starts(cp), cp.grp_end)
 
 
 def _pending_counts(cp):
@@ -454,9 +468,9 @@ def _group_path_sums(cp, t: np.ndarray):
     if lanes.size <= 1:
         lane_max = tot_t
     else:
-        # lane-compacted prefix sums: interleaved non-lane elements
-        # only ever add +0.0, so group sums match the masked cumsum
-        # bit for bit at a fraction of the traffic
+        # lane-compacted per-group sums: each lane's accesses are
+        # packed contiguously, so its per-group spans tile the packed
+        # array and ``_seg_sum`` reduces each group in isolation
         pack = cp.memo.get("lane_pack")
         if pack is None:
             pack = []
@@ -469,10 +483,7 @@ def _group_path_sums(cp, t: np.ndarray):
             cp.memo["lane_pack"] = pack
         lane_max = None
         for pos, si, ei in pack:
-            c = np.empty(pos.size + 1)
-            c[0] = 0.0
-            np.cumsum(np.take(in_t, pos), out=c[1:])
-            s_ = c[ei] - c[si]
+            s_ = _seg_sum(np.take(in_t, pos), si, ei)
             lane_max = s_ if lane_max is None \
                 else np.maximum(lane_max, s_)
     out_ops = cp.memo.get("out_ops")
@@ -826,24 +837,13 @@ def replay_trace(cfg: SystemConfig, plans,
             prev = tr.makespan
         res = _result(cfg, tr, macs, int(n_calls.sum()))
         return res, per + n_calls * ctrl_unit
-    t, x, has_p, d, ready, val = _compiled_arrays(cfg, cp, foot,
-                                                  host_s_per_elem)
-    k = cp.op_kind
-    tsa_a, tout_a, exp_a, t_sa, t_out = _run_ops(k, has_p, ready, val)
-    mks = np.maximum(tsa_a, tout_a)
-    bounds = np.concatenate([[0], cp.seg_op])
-    per = np.diff(np.concatenate([[0.0], mks])[bounds])
-    tr = _Trace(
-        t_sa_free=t_sa, t_out_free=t_out,
-        compute_s=float(val[k == P.OP_SA].sum()),
-        transfer_s=float(t.sum()),
-        exposed_s=float(exp_a.sum()),
-        desc_s=float(d[has_p].sum())
-        + float((k == P.OP_OUT).sum()) * cfg.dma.descriptor_time(),
-        trans_s=float(x.sum()),
-        host_s=float(val[k == P.OP_HOST].sum()))
-    res = _result(cfg, tr, macs, int(n_calls.sum()))
-    return res, per + n_calls * ctrl_unit
+    # the monolithic compiled path IS the streamed core run on one
+    # chunk — one code path, so chunked replay is bitwise-identical
+    st = _TraceStream([cfg.smmu.tlb_entries])
+    _stream_chunk([cfg], cp, [pl for pl, _ in sched.segments], foot,
+                  host_s_per_elem, st)
+    results, pers = _stream_results([cfg], st, foot)
+    return results[0], pers[0]
 
 
 # ===================================================================
@@ -964,7 +964,8 @@ class _Rows:
 
 
 def _batch_rows(cfgs, cp, foot: int, host_s_per_elem: float,
-                need_val: bool = True) -> list:
+                need_val: bool = True,
+                ready_carry: Optional[dict] = None) -> list:
     xrows: dict = {}
     trows: dict = {}
     grows: dict = {}
@@ -1008,11 +1009,25 @@ def _batch_rows(cfgs, cp, foot: int, host_s_per_elem: float,
             sxm = sxmrows.get(sk)
             if sxm is None:
                 sxm = sxmrows[sk] = np.where(hp, srows[sk], 0.0)
-            z = np.empty(2 * hp.size)
-            z[0::2] = tinm
-            z[1::2] = sxm
-            grows[gk] = (hp, d, srows[sk], np.cumsum(z)[1::2],
-                         prows[pk][2])
+            if ready_carry is None:
+                z = np.empty(2 * hp.size)
+                z[0::2] = tinm
+                z[1::2] = sxm
+                ready = np.cumsum(z)[1::2]
+            else:
+                # continued cumsum: the carried partial sum becomes
+                # the first element, so every addition happens in the
+                # same left-to-right order as one monolithic cumsum —
+                # the ready values (and the 0.0-carry first chunk)
+                # stay bitwise identical to the unchunked pass
+                z = np.empty(2 * hp.size + 1)
+                z[0] = ready_carry.get(gk, 0.0)
+                z[1::2] = tinm
+                z[2::2] = sxm
+                ready = np.cumsum(z)[2::2]
+                if ready.size:
+                    ready_carry[gk] = float(ready[-1])
+            grows[gk] = (hp, d, srows[sk], ready, prows[pk][2])
         has_p, d, _, ready, _ = grows[gk]
         ak = _sa_row_key(cfg.sa)
         vk = (ak, pk)
@@ -1105,6 +1120,246 @@ def _run_ops_vec_batch(opk, has_p, ready, val, t_sa, t_out):
     return tsa_a, tout_a, exp_a, t_sa, t_out
 
 
+# ===================================================================
+# Streaming chunked trace replay
+# ===================================================================
+# ``replay_trace`` materializes one CompiledPlan (plus its memoized
+# stack-distance passes) for the whole trace — fine at 78k events,
+# unaffordable at the multi-million-event traces an open-loop serving
+# run produces.  The streamed path prices the trace chunk by chunk
+# (chunks split only at plan boundaries, where the unconditional
+# OP_TAIL pins a recurrence barrier) while carrying exact cross-chunk
+# state: LRU stacks for the uTLB / L2-TLB / LLC (``LRUStreamState``
+# prefix replay), the input-DMA ready cumsum per group key, the
+# per-timeline (t_sa, t_out) max-plus frontier, and continued-cumsum
+# bucket accumulators.  Every carried quantity reproduces the
+# monolithic float operations in the same left-to-right order, so the
+# results are bitwise identical to ``replay_trace`` at ANY chunk size
+# while peak incremental allocations stay bounded by the chunk.
+
+def _chain_sum(carry: float, arr: np.ndarray) -> float:
+    """Left-to-right continued sum ``(((carry + a0) + a1) + ...)``.
+    Unlike ``arr.sum()`` (pairwise), chaining per-chunk partial sums
+    this way yields the same float no matter where the trace was
+    chunked."""
+    if arr.size == 0:
+        return carry
+    z = np.empty(arr.size + 1)
+    z[0] = carry
+    z[1:] = arr
+    return float(np.cumsum(z)[-1])
+
+
+class _TraceStream:
+    """Cross-chunk carried state of one streamed trace replay."""
+
+    def __init__(self, tes):
+        self.lru = LRUStreamState()        # page-id LRU (uTLB + LLC)
+        self.l2 = {te: LRUStreamState() for te in tes}
+        self.tes = tes                     # distinct uTLB reaches
+        self.ready = {}                    # gk -> ready cumsum carry
+        self.tl = {}         # (gk, vk) -> [t_sa, t_out, last mks]
+        self.keys = None                   # timeline key order
+        self.chain = {}                    # bucket key -> chained sum
+        self.stats = {}      # sk -> [lookups, misses, walks]
+        self.n_out = 0
+        self.n_events = 0
+        self.macs = 0
+        self.n_calls = []                  # per plan
+        self.per = []        # per-chunk (timelines, plans) mks deltas
+
+
+def _stream_seed_memo(cp, st: _TraceStream) -> None:
+    """Seed a chunk's trace-intrinsic memo from the carried LRU state,
+    so every downstream consumer (``tlb_walk_masks``, the LLC hit mask
+    via ``_lru_trace_memo``) reads globally-exact prev/stack-distance
+    arrays without knowing about chunking.  A no-op when the compile
+    was already analyzed (the cached single-chunk path)."""
+    if "prev" in cp.memo:
+        return
+    ids = cp.trace_ids
+    prev, sd = st.lru.analyze(ids)
+    cp.memo["prev"], cp.memo["sd"] = prev, sd
+    for te in st.tes:
+        miss = ~((prev >= 0) & (sd < te))
+        mp = np.nonzero(miss)[0]
+        sub_prev, sub_sd = st.l2[te].analyze(ids[mp])
+        cp.memo[("l2", te)] = (mp, sub_prev, sub_sd)
+
+
+def _stream_chunk(cfgs, cp, batch, foot: int, host_s_per_elem: float,
+                  st: _TraceStream) -> None:
+    """Price one compiled chunk for every config and fold the results
+    into the carried accumulators."""
+    _stream_seed_memo(cp, st)
+    rows = _batch_rows(cfgs, cp, foot, host_s_per_elem,
+                       ready_carry=st.ready)
+    tl_idx, tl_rows = _unique_timelines(rows)
+    keys = list(tl_idx)
+    if st.keys is None:
+        st.keys = keys
+        for key in keys:
+            st.tl[key] = [0.0, 0.0, 0.0]
+    elif keys != st.keys:    # fixed cfgs+foot => chunk-invariant keys
+        raise AssertionError("timeline keys changed across chunks")
+    ready_m = np.stack([r.ready for r in tl_rows])
+    val_m = np.stack([r.val for r in tl_rows])
+    t_sa0 = np.array([st.tl[key][0] for key in keys])
+    t_out0 = np.array([st.tl[key][1] for key in keys])
+    tsa_a, tout_a, exp_a, tsa_f, tout_f = _run_ops_vec_batch(
+        cp.op_kind, rows[0].has_p, ready_m, val_m, t_sa0, t_out0)
+    # per-plan makespan deltas: every plan ends in an OP_TAIL barrier,
+    # so chunk-local snapshots at plan bounds equal the monolithic ones
+    mks = np.maximum(tsa_a, tout_a)
+    mb = mks[:, cp.seg_op - 1]
+    prevcol = np.array([st.tl[key][2] for key in keys])[:, None]
+    st.per.append(np.diff(np.concatenate([prevcol, mb], axis=1),
+                          axis=1))
+    k = cp.op_kind
+    done: set = set()
+    for r in rows:
+        tkey = (r.gk, r.vk)
+        for key, arr in (
+                (("c", r.vk[0]), r.base[k == P.OP_SA]),
+                (("t", r.pk), r.t),
+                (("d", r.gk), r.d[r.has_p]),
+                (("x", r.sk), r.x),
+                (("h",), r.base[k == P.OP_HOST]),
+                (("e", tkey), exp_a[tl_idx[tkey]])):
+            if key not in done:
+                done.add(key)
+                st.chain[key] = _chain_sum(st.chain.get(key, 0.0), arr)
+        if ("s", r.sk) not in done:
+            done.add(("s", r.sk))
+            acc = st.stats.setdefault(r.sk, [0, 0, 0])
+            for q in range(3):
+                acc[q] += r.stats[q]
+    for j, key in enumerate(keys):
+        st.tl[key] = [float(tsa_f[j]), float(tout_f[j]),
+                      float(mb[j, -1])]
+    st.n_out += int((k == P.OP_OUT).sum())
+    st.n_events += cp.n_events
+    for pl in batch:
+        st.macs += pl.macs
+        st.n_calls.append(pl.n_calls)
+
+
+def _stream_results(cfgs, st: _TraceStream, foot: int):
+    """Per-config ``GemmResult``s + per-plan second arrays from a
+    finished ``_TraceStream`` — the same assembly ``_result`` /
+    ``_plan_batch_results`` perform, read off the carried
+    accumulators."""
+    per_all = np.concatenate(st.per, axis=1)
+    n_calls = np.asarray(st.n_calls, np.float64)
+    total_calls = int(n_calls.sum())
+    tl_pos = {key: j for j, key in enumerate(st.keys)}
+    results, pers = [], []
+    for cfg in cfgs:
+        sk = _smmu_row_key(cfg.smmu, foot)
+        pk = _path_row_key(cfg)
+        gk = (sk, pk, _dma_row_key(cfg.dma))
+        vk = (_sa_row_key(cfg.sa), pk)
+        tkey = (gk, vk)
+        tsa_f, tout_f, _ = st.tl[tkey]
+        lk, ms, wk = st.stats[sk]
+        ctrl_unit = (cfg.dma.doorbell_ns +
+                     cfg.dma.interrupt_ns) * 1e-9
+        results.append(GemmResult(
+            total_s=max(tsa_f, tout_f) + total_calls * ctrl_unit,
+            compute_s=st.chain[("c", vk[0])],
+            transfer_s=st.chain[("t", pk)],
+            exposed_transfer_s=st.chain[("e", tkey)],
+            descriptor_s=st.chain[("d", gk)]
+            + st.n_out * cfg.dma.descriptor_time(),
+            translation_s=st.chain[("x", sk)],
+            tlb_lookups=lk, tlb_misses=ms, ptw_walks=wk,
+            macs=st.macs,
+            host_s=st.chain[("h",)],
+            drain_s=max(0.0, tout_f - tsa_f)))
+        pers.append(per_all[tl_pos[tkey]] + n_calls * ctrl_unit)
+    return results, pers
+
+
+def replay_trace_streamed(cfgs, plans,
+                          host_s_per_elem: float = HOST_S_PER_ELEM,
+                          footprint_pages: Optional[int] = None,
+                          chunk_events: int = 262_144):
+    """Price a (possibly very long) trace of plans in O(chunk) memory.
+
+    ``cfgs`` is one ``SystemConfig`` or a sequence of them — every
+    extra config reuses each chunk's trace analysis through the
+    config-batched row dedup, so a DM/DC/DevMem sweep over a 10k-request
+    trace costs one streaming pass.  ``plans`` is a sequence of
+    repeat-1 ``StreamPlan``s, a repeat-1 ``PlanSchedule``, or a
+    zero-argument callable returning a fresh plan iterable — the
+    bounded-memory form: it is called once to measure the page
+    footprint (skipped when ``footprint_pages`` is given) and once
+    more to price, and at no point is more than one chunk of compiled
+    arrays (plus the carried LRU state) live.
+
+    Returns ``(results, per_plan)`` lists aligned with ``cfgs`` — or
+    ``(result, per)`` when a single config was passed — bitwise
+    identical to the monolithic ``replay_trace`` at ANY
+    ``chunk_events`` (chunks split at plan boundaries; the carried
+    LRU / ready / max-plus state reproduces the monolithic float
+    operations in order)."""
+    single = isinstance(cfgs, SystemConfig)
+    cfg_list = [cfgs] if single else list(cfgs)
+    if not cfg_list:
+        raise ValueError("replay_trace_streamed() needs >= 1 config")
+    if isinstance(plans, P.PlanSchedule):
+        segs = plans.segments
+        for pl, rep in segs:
+            if rep != 1:
+                raise ValueError(
+                    f"replay_trace_streamed() needs repeat-1 "
+                    f"segments, got ({pl.name}, {rep})")
+
+        def factory():
+            return (pl for pl, _ in segs)
+    elif callable(plans):
+        factory = plans
+    else:
+        seq = list(plans)
+
+        def factory():
+            return iter(seq)
+
+    def checked():
+        for pl in factory():
+            if pl.sampled_steps != pl.total_steps:
+                raise ValueError(
+                    f"trace replay is exact; plan {pl.name} is "
+                    "steady-state sampled")
+            yield pl
+
+    foot = footprint_pages if footprint_pages is not None \
+        else P.trace_footprint(checked())
+    # configs with equal price keys replay once, like replay_batch
+    uniq: "OrderedDict[tuple, int]" = OrderedDict()
+    slot = []
+    reps = []
+    for cfg in cfg_list:
+        key = _price_key(cfg, foot)
+        if key not in uniq:
+            uniq[key] = len(reps)
+            reps.append(cfg)
+        slot.append(uniq[key])
+    st = _TraceStream(sorted({c.smmu.tlb_entries for c in reps}))
+    for cp, batch in P.compile_trace_chunks(checked(), chunk_events):
+        _stream_chunk(reps, cp, batch, foot, host_s_per_elem, st)
+    if st.keys is None:
+        raise ValueError("replay_trace_streamed() needs >= 1 plan")
+    rres, rper = _stream_results(reps, st, foot)
+    results = [rres[s] if slot.count(s) == 1 else
+               dataclasses.replace(rres[s]) for s in slot]
+    pers = [rper[s] if slot.count(s) == 1 else rper[s].copy()
+            for s in slot]
+    if single:
+        return results[0], pers[0]
+    return results, pers
+
+
 def _segment_bundle(cp):
     """Trace-intrinsic segment structure for the sums-only batched
     recurrence — barrier layout plus per-segment SA/OUT spans and the
@@ -1135,16 +1390,31 @@ def _segment_bundle(cp):
 
 
 _SCRATCH_POOL: dict = {}
+_SCRATCH_CAP_BYTES = 512 << 20      # pool size that triggers a purge
+
+
+def release_scratch() -> int:
+    """Free the persistent batched-pricing scratch arrays and return
+    the number of bytes released.  ``tune()`` / ``sweep_load()`` call
+    this after their pricing phase so back-to-back searches don't hold
+    each other's peak scratch; safe to call any time (the pool refills
+    on demand)."""
+    freed = sum(v.nbytes for v in _SCRATCH_POOL.values())
+    _SCRATCH_POOL.clear()
+    return freed
 
 
 def _scratch(tag, shape):
     """Persistent scratch for the batched recurrence: the big
     (rows x positions) arrays exceed the allocator's mmap threshold,
     so reusing them across calls avoids a page-fault sweep per sweep.
-    Callers fully overwrite every buffer they request."""
+    Callers fully overwrite every buffer they request.  The pool is
+    bounded: allocating past ``_SCRATCH_CAP_BYTES`` purges it first
+    (``release_scratch()`` frees it explicitly)."""
     a = _SCRATCH_POOL.get((tag, shape))
     if a is None:
-        if sum(v.nbytes for v in _SCRATCH_POOL.values()) > (512 << 20):
+        if sum(v.nbytes for v in _SCRATCH_POOL.values()) > \
+                _SCRATCH_CAP_BYTES:
             _SCRATCH_POOL.clear()
         a = np.empty(shape)
         _SCRATCH_POOL[tag, shape] = a

@@ -229,14 +229,21 @@ class CompiledPlan:
         return int(self.op_kind.size)
 
 
-def _compile_events(streams: Sequence[list]) -> CompiledPlan:
+def _compile_events(streams: Sequence[list], intern: dict = None,
+                    page_keys: list = None) -> CompiledPlan:
     """Lower one or more event lists (a plan, or a schedule's segment
     plans back-to-back) into a ``CompiledPlan``.  Pending DMA_INs
     attach to the next COMPUTE regardless of interleaved DMA_OUTs, and
-    each stream end drains its trailing fetches — the same grouping
-    ``_replay_events`` applies event by event."""
-    intern: dict = {}
-    page_keys: list = []
+    each stream ends with an ``OP_TAIL`` barrier that drains trailing
+    fetches — the same grouping ``_replay_events`` applies event by
+    event.  Passing a shared ``intern``/``page_keys`` pair threads one
+    page-id namespace through successive calls, so a long trace can be
+    compiled chunk by chunk while cross-chunk page reuse stays visible
+    to the LRU analyses."""
+    if intern is None:
+        intern = {}
+    if page_keys is None:
+        page_keys = []
     t_ids: list = []
     t_nb: list = []
     t_out: list = []
@@ -287,12 +294,17 @@ def _compile_events(streams: Sequence[list]) -> CompiledPlan:
                 opv.append(0.0)
                 gend.append(consumed)
                 nl.append(0)
-        if len(in_lane) > consumed:                # trailing fetches
-            opk.append(OP_TAIL)
-            opv.append(0.0)
-            nl.append(len(glanes))
-            consumed = len(in_lane)
-            gend.append(consumed)
+        # every stream ends with a drain barrier, pending fetches or
+        # not: an empty tail is numerically inert (nothing pending, and
+        # its ready value is already folded into t_sa), but it pins a
+        # segment boundary at every plan end, which is what lets a
+        # chunked compile+replay of the same streams stay bitwise equal
+        # to the monolithic one
+        opk.append(OP_TAIL)
+        opv.append(0.0)
+        nl.append(len(glanes))
+        consumed = len(in_lane)
+        gend.append(consumed)
         seg_op.append(len(opk))
         seg_trace.append(len(t_ids))
     return CompiledPlan(
@@ -307,6 +319,48 @@ def _compile_events(streams: Sequence[list]) -> CompiledPlan:
         n_lanes=np.asarray(nl, np.int16),
         seg_op=np.asarray(seg_op, np.int64),
         seg_trace=np.asarray(seg_trace, np.int64))
+
+
+def trace_footprint(plans) -> int:
+    """Distinct page keys a sequence of plans touches — the global
+    address-space footprint the SMMU walk model needs before a chunked
+    replay can price its first chunk.  Accepts any iterable of
+    ``StreamPlan``s (a generator is consumed)."""
+    seen: set = set()
+    for p in plans:
+        for ev in p.events:
+            if ev.kind is not EventKind.COMPUTE:
+                seen.add(ev.page)
+    return len(seen)
+
+
+def compile_trace_chunks(plans, chunk_events: int = 262_144):
+    """Compile a (possibly unbounded) sequence of plans into bounded
+    ``CompiledPlan`` chunks, splitting only at plan boundaries.
+
+    Yields ``(compiled_chunk, plan_batch)`` pairs.  All chunks share
+    ONE page-id namespace (the same ``intern``/``page_keys`` objects
+    thread through every ``_compile_events`` call), so cross-chunk and
+    cross-request page reuse — the prefix-caching / KV-pool-recycling
+    signal — survives chunking; only the compiled arrays themselves are
+    chunk-sized.  ``plans`` may be a generator: at most one chunk of
+    plans is held at a time."""
+    if chunk_events < 1:
+        raise ValueError(f"chunk_events must be >= 1: {chunk_events}")
+    intern: dict = {}
+    page_keys: list = []
+    batch: list = []
+    n = 0
+    for p in plans:
+        batch.append(p)
+        n += len(p.events)
+        if n >= chunk_events:
+            yield _compile_events([q.events for q in batch],
+                                  intern, page_keys), batch
+            batch, n = [], 0
+    if batch:
+        yield _compile_events([q.events for q in batch],
+                              intern, page_keys), batch
 
 
 # --------------------------------------------------------------- compose
@@ -1116,6 +1170,7 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
                  x: str = "prompt", k: str = "k", v: str = "v",
                  out: str = "prefill_out",
                  scale: Optional[float] = None,
+                 span: Optional[tuple] = None,
                  name: str = "prefill") -> StreamPlan:
     """One request's prompt prefill over the SAME ``PageTable`` pages a
     decode step streams: per layer, a weight-streaming QKV projection
@@ -1133,6 +1188,16 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
     to the first ``(i+1) * page_tokens`` positions).  Multi-layer plans
     prefix all tensor names ``L{i}.`` so each layer's weights and KV
     pages own their SMMU namespace; layer i's output feeds layer i+1.
+
+    ``span=(t0, t1)`` restricts the plan to prefilling query tokens
+    ``[t0, t1)`` of the prompt — chunked-prefill admission splits a
+    long prompt into successive span plans over the SAME page table,
+    each attending over every KV page written so far (pages ``[0,
+    ceil(t1 / page_tokens))``), so earlier chunks' pool pages are
+    re-streamed exactly as a later decode step would re-stream them.
+    ``t0`` must be page-aligned; ``t1`` page-aligned or the prompt
+    end.  The default span ``(0, prompt_len)`` produces the identical
+    plan this builder has always produced.
     """
     pt, KH, hd = page_tokens, n_kv_heads, head_dim
     HQ = KH if n_q_heads is None else n_q_heads
@@ -1145,6 +1210,14 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
         raise ValueError(
             f"page_table holds {len(page_table)} pages but a "
             f"{T}-token prompt needs {npg}")
+    s0, s1 = (0, T) if span is None else (int(span[0]), int(span[1]))
+    if not (0 <= s0 < s1 <= T) or s0 % pt or (s1 != T and s1 % pt):
+        raise ValueError(
+            f"span {span} invalid for a {T}-token prompt with "
+            f"{pt}-token pages (start page-aligned, end page-aligned "
+            f"or the prompt end)")
+    c0, c1 = s0 // pt, -(-s1 // pt)
+    Tq = s1 - s0                        # query tokens this plan covers
     dm = d_model if d_model is not None else HQ * hd
     dff = d_ff if d_ff is not None else 4 * dm
     page_bytes = pt * KH * hd * elem
@@ -1153,7 +1226,7 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
 
     def layer_plans(P: str, x_in: str, out_name: str) -> list:
         kt, vt = P + k, P + v
-        plans = [gemm_plan(T, (HQ + 2 * KH) * hd, dm, np_dt, a=x_in,
+        plans = [gemm_plan(Tq, (HQ + 2 * KH) * hd, dm, np_dt, a=x_in,
                            b=P + "wqkv", c=P + "qkv", b_kind="weight",
                            c_kind="intermediate", page_bytes=page_bytes)]
         # write the freshly projected K/V into the sequence's pool
@@ -1161,7 +1234,7 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
         # every later chunk of this prefill) streams back in
         events: list = []
         eid = 0
-        for pid in tbl:
+        for pid in tbl[c0:c1]:
             for pool in (kt, vt):
                 events.append(Event(eid, EventKind.DMA_OUT,
                                     nbytes=page_bytes,
@@ -1176,10 +1249,12 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
         eid = 0
         macs = 0
         attn = P + "attn"
-        tensors = {attn: TensorSpec(T, HQ * hd, {"C"}, "intermediate"),
+        # rows = this span's query tokens (the wo GEMM consumes the
+        # same Tq-row view); store offsets below are span-relative
+        tensors = {attn: TensorSpec(Tq, HQ * hd, {"C"}, "intermediate"),
                    kt: kv_spec(), vt: kv_spec()}
-        for ci in range(npg):
-            t1 = min(T, (ci + 1) * pt)
+        for ci in range(c0, c1):
+            t1 = min(s1, (ci + 1) * pt)
             qt = t1 - ci * pt
             kv_upto = ci + 1
             scores, p = P + f"c{ci}.s", P + f"c{ci}.p"
@@ -1234,24 +1309,24 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
                                     nbytes=KH * qt * hd * elem,
                                     page=(attn, (ci, g)),
                                     deps=(chain[g],), op="store",
-                                    meta={"at": (ci * pt,
+                                    meta={"at": (ci * pt - s0,
                                                  g * KH * hd)}))
                 eid += 1
             macs += qt * HQ * kv_upto * pt * hd * 2
         plans.append(StreamPlan(P + "chunked_attn", np_dt, page_bytes,
                                 events, tensors, macs=macs, n_calls=1))
         plans += [
-            gemm_plan(T, dm, HQ * hd, np_dt, a=attn, b=P + "wo",
+            gemm_plan(Tq, dm, HQ * hd, np_dt, a=attn, b=P + "wo",
                       c=P + "proj", b_kind="weight",
                       c_kind="intermediate", page_bytes=page_bytes),
-            host_plan("layernorm", (P + "proj",), P + "ln", (T, dm),
-                      2 * T * dm, np_dt, page_bytes),
-            gemm_plan(T, dff, dm, np_dt, a=P + "ln", b=P + "w1",
+            host_plan("layernorm", (P + "proj",), P + "ln", (Tq, dm),
+                      2 * Tq * dm, np_dt, page_bytes),
+            gemm_plan(Tq, dff, dm, np_dt, a=P + "ln", b=P + "w1",
                       c=P + "ff1", b_kind="weight",
                       c_kind="intermediate", page_bytes=page_bytes),
-            host_plan("gelu", (P + "ff1",), P + "g", (T, dff), T * dff,
-                      np_dt, page_bytes),
-            gemm_plan(T, dm, dff, np_dt, a=P + "g", b=P + "w2",
+            host_plan("gelu", (P + "ff1",), P + "g", (Tq, dff),
+                      Tq * dff, np_dt, page_bytes),
+            gemm_plan(Tq, dm, dff, np_dt, a=P + "g", b=P + "w2",
                       c=out_name, b_kind="weight", c_kind="output",
                       page_bytes=page_bytes),
         ]
@@ -1265,4 +1340,5 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
             else out
         plans += layer_plans(P, inp, out_name)
         inp = out_name
-    return concat(plans, name=f"{name}{T}t{n_layers}l")
+    tag = "" if span is None else f".{s0}-{s1}"
+    return concat(plans, name=f"{name}{T}t{n_layers}l{tag}")

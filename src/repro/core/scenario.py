@@ -677,10 +677,10 @@ def clear_caches():
     """Drop cached plans/serving traces (exact full-depth plans plus
     their compiled arrays are order-100 MB)."""
     global cache_hits, cache_misses
-    from repro.accesys.pipeline import _SCRATCH_POOL
+    from repro.accesys.pipeline import release_scratch
     _PLAN_CACHE.clear()
     _TRACE_CACHE.clear()
-    _SCRATCH_POOL.clear()
+    release_scratch()
     cache_hits = cache_misses = 0
 
 
@@ -1121,6 +1121,8 @@ def tune(sc: Scenario, space=None, objective="latency", *,
                 area_um2=DS.point_area_um2(pts[i]),
                 score=score_fn(pts[i], r))
     wall = time.perf_counter() - t0
+    from repro.accesys.pipeline import release_scratch
+    release_scratch()          # batched pricing holds peak scratch
     for i in DS.pareto_front((tp.total_s, tp.area_um2)
                              for tp in scored):
         scored[i].on_pareto = True
@@ -1151,3 +1153,221 @@ def sampling_error(sc: Scenario, *,
             / max(sampled.events_replayed, 1),
     }
     return sampled
+
+
+# ============================================================ load sweep
+LOAD_SHAPE = dict(arch="qwen2_0_5b", slots=4, max_seq=96,
+                  prompt_lo=8, prompt_hi=24, max_new_tokens=8,
+                  prefill_chunk_tokens=16, kv_page_tokens=8,
+                  prefix_tokens=0, seed=0)
+
+
+@dataclasses.dataclass
+class LoadPoint:
+    """One (offered QPS, memory mode) cell of a load sweep."""
+    qps: float                     # offered arrival rate
+    mode: str
+    percentiles: dict              # ServingSimReport.percentiles()
+    total_s: float                 # simulated time to drain the trace
+    n_finished: int
+    n_records: int
+    n_events: int
+
+    @property
+    def goodput_qps(self) -> float:
+        return self.n_finished / max(self.total_s, 1e-30)
+
+    def to_json(self) -> dict:
+        return {"qps": self.qps, "mode": self.mode,
+                "total_s": self.total_s,
+                "goodput_qps": self.goodput_qps,
+                "n_finished": self.n_finished,
+                "n_records": self.n_records,
+                "n_events": self.n_events, **self.percentiles}
+
+
+@dataclasses.dataclass
+class LoadSweepResult:
+    """Offered-QPS vs tail-latency curves per memory mode, the
+    saturation knee per mode, and (when a shared prefix is configured)
+    the prefix-caching on/off delta at the reference load."""
+    arch: str
+    arrivals: str
+    qps: tuple                     # ascending offered-rate grid
+    modes: tuple
+    n_requests: int
+    points: list                   # [LoadPoint], qps-major, mode order
+    knee_qps: dict                 # mode -> first saturated qps | None
+    calibration: dict              # est_step_s / est_prefill_s_per_token
+    prefix_delta: Optional[dict] = None   # mode -> on/off tails
+    wall_s: float = 0.0
+
+    SCHEMA = "loadsweep/v1"
+
+    def curve(self, mode: str) -> list:
+        return [pt for pt in self.points if pt.mode == mode]
+
+    def to_json(self) -> dict:
+        return {"schema": self.SCHEMA, "arch": self.arch,
+                "arrivals": self.arrivals, "qps": list(self.qps),
+                "modes": list(self.modes),
+                "n_requests": self.n_requests,
+                "knee_qps": self.knee_qps,
+                "calibration": self.calibration,
+                "prefix_delta": self.prefix_delta,
+                "wall_s": round(self.wall_s, 3),
+                "points": [pt.to_json() for pt in self.points]}
+
+
+def sweep_load(qps=None, *, n_requests: int = 1000,
+               arrivals: str = "poisson", modes=MODES,
+               prefix_caching: bool = True,
+               chunk_events: int = 262_144, knee_factor: float = 3.0,
+               max_steps: int = 1_000_000,
+               host_s_per_elem: Optional[float] = None,
+               **shape) -> LoadSweepResult:
+    """Capacity-plan an open-loop serving workload: drive the
+    plan-only engine at each offered rate in ``qps`` (auto: a grid
+    bracketing the calibrated service capacity), stream every trace
+    through ONE chunked multi-mode replay
+    (``replay_trace_streamed`` — O(chunk) memory, all memory modes in
+    a single pass), and fold the priced durations back onto requests.
+
+    Returns offered-QPS vs TTFT/TPOT p50/p95/p99 curves per memory
+    mode plus the saturation knee — the first grid rate whose TTFT
+    p99 exceeds ``knee_factor`` x the unloaded (lowest-rate) baseline.
+    With ``prefix_tokens`` set in ``shape``, the main curves run with
+    ``prefix_caching`` as given and the opposite setting is measured
+    once at the reference (lowest) rate — the on/off delta.
+
+    The engine's admission clock is calibrated from a small probe
+    trace priced on the DC system; reported latencies always come
+    from the replay itself, never from the estimates."""
+    import numpy as np
+    from repro.accesys.pipeline import (HOST_S_PER_ELEM, release_scratch,
+                                        replay_trace,
+                                        replay_trace_streamed)
+    from repro.configs import get_reduced
+    from repro.core.plan import trace_footprint
+    from repro.serving.engine import Request, ServingEngine, arrival_times
+    from repro.serving.sim_report import ServingAccumulator
+
+    t0 = time.perf_counter()
+    sh = _merge_params("load", LOAD_SHAPE, shape)
+    hpe = host_s_per_elem or HOST_S_PER_ELEM
+    modes = tuple(modes)
+    cfg_model = get_reduced(sh["arch"])
+    sys_cfgs = [system_for(Scenario(model="serve", mode=m))
+                for m in modes]
+
+    def mk_engine(caching: bool) -> ServingEngine:
+        return ServingEngine(
+            cfg_model, slots=sh["slots"], max_seq=sh["max_seq"],
+            plan_only=True, kv_page_tokens=sh["kv_page_tokens"],
+            prefix_tokens=sh["prefix_tokens"], prefix_caching=caching)
+
+    def mk_requests(n: int) -> list:
+        rng = np.random.default_rng(sh["seed"] + 1)
+        lo, hi = sh["prompt_lo"], sh["prompt_hi"]
+        return [Request(
+            uid=i,
+            prompt=rng.integers(
+                1, 250,
+                size=lo if lo >= hi else int(rng.integers(lo, hi))
+            ).astype(np.int32),
+            max_new_tokens=sh["max_new_tokens"])
+            for i in range(n)]
+
+    # ---- calibrate the admission clock on a small priced probe (DC)
+    probe = mk_engine(prefix_caching and sh["prefix_tokens"] > 0)
+    probe.run_open_loop(
+        mk_requests(min(8, n_requests)), np.zeros(min(8, n_requests)),
+        prefill_chunk_tokens=sh["prefill_chunk_tokens"])
+    dc = system_for(Scenario(model="serve", mode="DC"))
+    _, probe_per = replay_trace(dc, [r.plan for r in probe.trace],
+                                host_s_per_elem=hpe)
+    dec = [s for s, r in zip(probe_per, probe.trace)
+           if r.kind == "decode"]
+    pft = [(s, r.n_tokens) for s, r in zip(probe_per, probe.trace)
+           if r.kind == "prefill" and r.n_tokens]
+    est_step = float(np.mean(dec)) if dec else 1e-4
+    est_pf = float(sum(s for s, _ in pft)
+                   / max(sum(n for _, n in pft), 1))
+    mean_prompt = sh["prefix_tokens"] + \
+        (sh["prompt_lo"] + max(sh["prompt_lo"], sh["prompt_hi"] - 1)) / 2
+    cap_qps = 1.0 / (est_pf * mean_prompt
+                     + est_step * sh["max_new_tokens"] / sh["slots"])
+    if qps is None:
+        qps = tuple(round(cap_qps * f, 3)
+                    for f in (0.25, 0.5, 1.0, 2.0, 4.0))
+    qps = tuple(sorted(float(q) for q in qps))
+    open_kw = dict(est_step_s=est_step, est_prefill_s_per_token=est_pf,
+                   prefill_chunk_tokens=sh["prefill_chunk_tokens"],
+                   max_steps=max_steps)
+
+    def run_point(lam: float, caching: bool):
+        """One offered rate, all modes in one streamed replay."""
+        arr = arrival_times(arrivals, n_requests, lam, seed=sh["seed"])
+        eng1 = mk_engine(caching)
+        counts = {"records": 0, "events": 0}
+
+        def plans_pass1():
+            for rec in eng1.open_loop_records(
+                    mk_requests(n_requests), arr, **open_kw):
+                counts["records"] += 1
+                counts["events"] += len(rec.plan.events)
+                yield rec.plan
+        foot = trace_footprint(plans_pass1())
+        acc = ServingAccumulator()
+        eng2 = mk_engine(caching)
+
+        def plans_pass2():
+            return (rec.plan for rec in acc.wrap(
+                eng2.open_loop_records(mk_requests(n_requests), arr,
+                                       **open_kw)))
+        results, pers = replay_trace_streamed(
+            sys_cfgs, plans_pass2, host_s_per_elem=hpe,
+            footprint_pages=foot, chunk_events=chunk_events)
+        live = eng2.unfinished_uids()
+        return [LoadPoint(
+            qps=lam, mode=m, percentiles=rep.percentiles(),
+            total_s=rep.total_s, n_finished=eng2.n_finished,
+            n_records=counts["records"], n_events=counts["events"])
+            for m, rep in zip(modes, (
+                acc.report(m, r, p, live)
+                for m, r, p in zip(modes, results, pers)))]
+
+    caching_main = prefix_caching and sh["prefix_tokens"] > 0
+    points: list = []
+    for lam in qps:
+        points += run_point(lam, caching_main)
+    knee: dict = {}
+    for m in modes:
+        curve = [pt for pt in points if pt.mode == m]
+        base = curve[0].percentiles["ttft_p99_us"]
+        knee[m] = next(
+            (pt.qps for pt in curve
+             if pt.percentiles["ttft_p99_us"] > knee_factor * base),
+            None)
+    prefix_delta = None
+    if sh["prefix_tokens"] > 0:
+        other = run_point(qps[0], not caching_main)
+        prefix_delta = {}
+        for pt_main, pt_other in zip(
+                [pt for pt in points if pt.qps == qps[0]], other):
+            on, off = (pt_main, pt_other) if caching_main else \
+                (pt_other, pt_main)
+            prefix_delta[pt_main.mode] = {
+                "ttft_p99_us_on": on.percentiles["ttft_p99_us"],
+                "ttft_p99_us_off": off.percentiles["ttft_p99_us"],
+                "total_s_on": on.total_s, "total_s_off": off.total_s,
+                "records_on": on.n_records, "records_off": off.n_records}
+    release_scratch()
+    return LoadSweepResult(
+        arch=sh["arch"], arrivals=arrivals, qps=qps, modes=modes,
+        n_requests=n_requests, points=points, knee_qps=knee,
+        calibration={"est_step_s": est_step,
+                     "est_prefill_s_per_token": est_pf,
+                     "capacity_qps_est": cap_qps},
+        prefix_delta=prefix_delta,
+        wall_s=time.perf_counter() - t0)

@@ -30,6 +30,15 @@ against the selected workload instead of replaying a single system:
 every feasible point is priced with the config-batched replayer and
 the latency-vs-area Pareto frontier is printed.  ``--tune-points N``
 random-samples the space instead of enumerating the full grid.
+
+``--workload serve --arrivals poisson`` switches the serve scenario
+from draining a closed queue to an OPEN-loop load sweep
+(``core.scenario.sweep_load``): seeded poisson/bursty/diurnal
+arrivals at each ``--qps`` grid rate (auto-bracketed around the
+calibrated capacity when omitted), ``--requests`` requests per
+point, every trace priced across the memory modes in one chunked
+streaming replay — printing offered QPS vs TTFT/TPOT p99 per mode
+plus the saturation knee.
 """
 from __future__ import annotations
 
@@ -123,6 +132,42 @@ def _run_tune(sc: Scenario, n_points) -> int:
     return 0
 
 
+def _run_load_sweep(args) -> int:
+    """Open-loop load sweep over the memory modes: one line per
+    (offered QPS, mode) plus the saturation knee per mode."""
+    from repro.core.scenario import sweep_load
+    res = sweep_load(qps=args.qps, n_requests=args.requests,
+                     arrivals=args.arrivals, modes=tuple(args.modes),
+                     prefix_tokens=args.prefix_tokens)
+    cal = res.calibration
+    print(f"load sweep {res.arch} ({res.arrivals}, "
+          f"{res.n_requests} requests/point): est capacity "
+          f"{cal['capacity_qps_est']:,.0f} qps "
+          f"(decode step {cal['est_step_s']*1e6:.1f}us); "
+          f"wall {res.wall_s:.1f}s")
+    for mode in res.modes:
+        for pt in res.curve(mode):
+            p = pt.percentiles
+            cens = f" in_flight={p['n_in_flight']}" \
+                if p["n_in_flight"] else ""
+            print(f"  {mode:7s} qps={pt.qps:10,.1f} "
+                  f"ttft_p99={p['ttft_p99_us']:9.1f}us "
+                  f"tpot_p99={p['tpot_p99_us']:8.1f}us "
+                  f"goodput={pt.goodput_qps:10,.1f}/s "
+                  f"events={pt.n_events:,}{cens}")
+        k = res.knee_qps[mode]
+        print(f"  {mode:7s} saturation knee: " +
+              (f"{k:,.1f} qps" if k else "not reached on this grid"))
+    if res.prefix_delta:
+        for mode, d in res.prefix_delta.items():
+            print(f"  {mode:7s} prefix caching: ttft_p99 "
+                  f"{d['ttft_p99_us_on']:.1f}us vs "
+                  f"{d['ttft_p99_us_off']:.1f}us uncached "
+                  f"({d['records_off'] - d['records_on']} prefill "
+                  f"records saved)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", metavar="SCENARIO",
@@ -164,6 +209,20 @@ def main(argv=None) -> int:
                          "of the full grid (seeded, deterministic)")
     ap.add_argument("--devmem-dram", default="HBM2",
                     help="DRAM tech for DevMem mode (paper Fig. 12)")
+    ap.add_argument("--arrivals", default=None,
+                    choices=["poisson", "bursty", "diurnal"],
+                    help="serve only: open-loop load sweep with this "
+                         "arrival process (core.scenario.sweep_load)")
+    ap.add_argument("--qps", type=float, nargs="+", default=None,
+                    metavar="RATE",
+                    help="offered-rate grid for --arrivals (default: "
+                         "auto-bracketed around calibrated capacity)")
+    ap.add_argument("--requests", type=int, default=200,
+                    help="requests per load point for --arrivals "
+                         "(default 200)")
+    ap.add_argument("--prefix-tokens", type=int, default=0,
+                    help="shared system-prompt tokens for --arrivals "
+                         "(reports the prefix-caching on/off delta)")
     args = ap.parse_args(argv)
     if args.list:
         print("\n".join(scenario_names()))
@@ -200,6 +259,12 @@ def main(argv=None) -> int:
         ap.error(str(e))
     if target.kind == "serve":
         args.dtype = "fp16"        # the engine's KV cache dtype decides
+    if args.arrivals is not None:
+        if target.kind != "serve":
+            ap.error("--arrivals only applies to --workload serve")
+        if args.requests < 1:
+            ap.error("--requests must be >= 1")
+        return _run_load_sweep(args)
     sc = Scenario(model=name, dtype=args.dtype, seq=args.seq,
                   n_layers=args.layers,
                   sampling="exact" if args.exact else "sampled",

@@ -39,15 +39,62 @@ class Request:
 @dataclasses.dataclass
 class PlanRecord:
     """One priced event of a recorded serving trace: a prompt prefill
-    (one per admission) or a batched multi-layer decode step, tagged
-    with the engine step index and the slot -> request-uid mapping so
-    simulated time folds back onto individual requests."""
+    (one per admission, or one per chunk under chunked prefill) or a
+    batched multi-layer decode step, tagged with the engine step index
+    and the slot -> request-uid mapping so simulated time folds back
+    onto individual requests.  ``uids == (-1,)`` marks the shared
+    prefix-cache prefill, which belongs to no request."""
     kind: str                       # "prefill" | "decode"
     step_idx: int                   # engine decode-step counter
     slots: tuple                    # slot ids this plan covers
     uids: tuple                     # request uid per slot
     plan: object                    # core.plan.StreamPlan
     arrival_event: int = 0          # prefill: requester's arrival index
+    n_tokens: int = 0               # prefill: tokens this chunk covers
+
+
+def arrival_times(kind: str, n: int, qps: float, seed: int = 0, *,
+                  burst_factor: float = 4.0, burst_len: float = 16.0,
+                  period_s: float = 60.0, depth: float = 0.8
+                  ) -> np.ndarray:
+    """Seeded open-loop arrival process: ``n`` absolute arrival times
+    at a mean offered rate of ``qps`` requests/second.  Deterministic
+    in ``(kind, n, qps, seed, shape params)``.
+
+    - ``poisson``: i.i.d. exponential gaps (memoryless).
+    - ``bursty``: exponential gaps scaled by alternating quiet/hot
+      runs of geometric length ``burst_len`` — hot gaps shrink by
+      ``burst_factor``, quiet gaps stretch to keep the mean rate.
+    - ``diurnal``: gaps modulated by ``1 + depth*sin(2*pi*t/period_s)``
+      — a load wave (period compressed to seconds so a 10k-request
+      trace spans several cycles)."""
+    if qps <= 0:
+        raise ValueError(f"qps must be > 0, got {qps}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / qps, size=n)
+    if kind == "poisson":
+        pass
+    elif kind == "bursty":
+        lo = 1.0 / burst_factor
+        hi = 2.0 - lo                 # quiet stretch preserving mean
+        scale = np.empty(n)
+        i, hot = 0, False
+        while i < n:
+            run = int(rng.geometric(1.0 / burst_len))
+            scale[i:i + run] = lo if hot else hi
+            i += run
+            hot = not hot
+        gaps *= scale
+    elif kind == "diurnal":
+        t = np.cumsum(gaps)
+        rate = np.maximum(
+            1.0 + depth * np.sin(2.0 * np.pi * t / period_s), 1e-3)
+        gaps = gaps / rate
+    else:
+        raise ValueError(
+            f"unknown arrival process {kind!r} — expected poisson, "
+            "bursty, or diurnal")
+    return np.cumsum(gaps)
 
 
 @dataclasses.dataclass
@@ -86,25 +133,47 @@ class ServingEngine:
     ``kv_pool_pages`` caps the pool (default: every slot can grow to
     ``max_seq``, so only explicit caps ever defer)."""
 
-    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+    def __init__(self, cfg: ModelConfig, params=None, *, slots: int = 4,
                  max_seq: int = 256, eos_token: Optional[int] = None,
                  record_plans: bool = False, kv_page_tokens: int = 8,
                  kv_dtype: str = "float16",
-                 kv_pool_pages: Optional[int] = None):
+                 kv_pool_pages: Optional[int] = None,
+                 plan_only: bool = False, prefix_tokens: int = 0,
+                 prefix_caching: bool = False):
+        """``plan_only=True`` skips model/cache/jit construction
+        entirely (``params`` unused) and drives the shadow PageTable
+        alone — the open-loop capacity-planning mode, where generated
+        token VALUES never matter and only the plan trace does.
+        ``prefix_tokens`` prepends a shared system prompt to every
+        request; with ``prefix_caching=True`` its pages are interned
+        once per trace (``reserve_prefix``) and every request maps
+        them read-only, otherwise each request re-prefills them."""
         self.cfg = cfg
-        self.model = Model(cfg, remat="none")
+        self.plan_only = plan_only
+        record_plans = record_plans or plan_only
+        self.model = None if plan_only else Model(cfg, remat="none")
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.eos = eos_token
-        self.cache = self.model.init_cache(slots, max_seq)
+        self.cache = None if plan_only else \
+            self.model.init_cache(slots, max_seq)
         self.slot_req: list[Optional[Request]] = [None] * slots
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
         self._next_tokens = np.zeros((slots,), np.int32)
         self._remaining = np.zeros((slots,), np.int32)
+        self._lens = np.zeros((slots,), np.int32)   # plan-only mirror
         self.trace: list[PlanRecord] = []
+        self.n_records = 0          # records emitted (trace + sinks)
+        self.n_finished = 0
         self.deferred_admissions = 0
+        self.sim_t = 0.0            # open-loop simulated clock
+        self._sink: Optional[list] = None
+        self._prefilling: dict = {}  # slot -> [req, done, total]
+        self._prefix_tokens = int(prefix_tokens)
+        self._prefix_pages: Optional[np.ndarray] = None
+        self._prefix_recorded = False
         self._table = None
         if record_plans:
             from repro.serving.kv_cache import (PagedCacheConfig,
@@ -119,10 +188,22 @@ class ServingEngine:
                     max_pages_per_seq=pages_per_seq,
                     dtype=kv_dtype),
                 max_seqs=slots)
+        if self._prefix_tokens:
+            if self._table is None:
+                raise ValueError("prefix_tokens needs record_plans")
+            if self._prefix_tokens % kv_page_tokens:
+                raise ValueError(
+                    f"prefix_tokens={prefix_tokens} must be a multiple "
+                    f"of kv_page_tokens={kv_page_tokens} (chunked "
+                    "prefill spans are page-aligned)")
+            if prefix_caching:
+                self._prefix_pages = self._table.reserve_prefix(
+                    self._prefix_tokens // kv_page_tokens)
 
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill1 = jax.jit(
-            lambda p, b: self.model.prefill(p, b, max_seq))
+        if not plan_only:
+            self._decode = jax.jit(self.model.decode_step)
+            self._prefill1 = jax.jit(
+                lambda p, b: self.model.prefill(p, b, max_seq))
 
     @property
     def step_plans(self) -> list:
@@ -131,17 +212,27 @@ class ServingEngine:
         return [r.plan for r in self.trace if r.kind == "decode"]
 
     # ------------------------------------------------------------- API
+    def _record(self, rec: PlanRecord) -> int:
+        """Append a trace record (to the streaming sink when one is
+        installed) and return its global index — the ``arrival_event``
+        coordinate space."""
+        idx = self.n_records
+        self.n_records += 1
+        (self.trace if self._sink is None else self._sink).append(rec)
+        return idx
+
     def submit(self, req: Request):
         req.submitted_s = time.perf_counter()
-        req.arrival_event = len(self.trace)
+        req.arrival_event = self.n_records
         self.queue.append(req)
 
     def _max_pages(self, req: Request) -> int:
-        """Worst-case pages ``req`` can ever hold: its final cache
-        length is min(prompt + max_new_tokens - 1, max_seq - 1), padded
-        to max_seq here for safety."""
-        max_len = min(len(req.prompt) + req.max_new_tokens,
-                      self.max_seq)
+        """Worst-case pages ``req`` can ever hold (shared prefix pages
+        included): its final cache length is min(prefix + prompt +
+        max_new_tokens - 1, max_seq - 1), padded to max_seq here for
+        safety."""
+        max_len = min(self._prefix_tokens + len(req.prompt)
+                      + req.max_new_tokens, self.max_seq)
         return -(-max_len // self._table.cfg.page_tokens)
 
     def _can_admit(self, req: Request) -> bool:
@@ -153,6 +244,8 @@ class ServingEngine:
                 f"max length but the pool can never hold that "
                 f"(n_pages={t.cfg.n_pages}, "
                 f"max_pages_per_seq={t.cfg.max_pages_per_seq})")
+        if self._prefix_pages is not None:
+            need -= len(self._prefix_pages)   # shared pages are mapped
         # pages admitted slots may still claim while decoding
         growth = sum(self._max_pages(r) - int(t.held[s])
                      for s, r in enumerate(self.slot_req)
@@ -197,7 +290,7 @@ class ServingEngine:
                 if not self._table.note_tokens(
                         slot, int(self.cache["len"][slot])):
                     raise RuntimeError("shadow KV table out of pages")
-                self.trace.append(PlanRecord(
+                self._record(PlanRecord(
                     "prefill", self.stats.decode_steps, (slot,),
                     (req.uid,),
                     self._table.prefill_plan(
@@ -205,12 +298,14 @@ class ServingEngine:
                         n_q_heads=self.cfg.n_heads,
                         d_model=self.cfg.d_model, d_ff=self.cfg.d_ff,
                         n_layers=self.cfg.n_layers),
-                    arrival_event=req.arrival_event))
+                    arrival_event=req.arrival_event,
+                    n_tokens=len(req.prompt)))
 
     def _retire(self, slot: int):
         req = self.slot_req[slot]
         req.done_s = time.perf_counter()
         self.slot_req[slot] = None
+        self.n_finished += 1
         self.cache["len"] = self.cache["len"].at[slot].set(0)
         if self._table is not None:
             self._table.free_seq(slot)
@@ -224,7 +319,7 @@ class ServingEngine:
         if self._table is not None:
             # the step streams each active slot's currently-resident KV
             # pages; the new token's KV lands before the next step
-            self.trace.append(PlanRecord(
+            self._record(PlanRecord(
                 "decode", self.stats.decode_steps, tuple(active),
                 tuple(self.slot_req[s].uid for s in active),
                 self._table.decode_step_plan(
@@ -261,4 +356,181 @@ class ServingEngine:
             self.step()
             steps += 1
         self.stats.wall_s = time.perf_counter() - t0
+        return self.stats
+
+    # ------------------------------------------ open-loop (plan-only)
+    def unfinished_uids(self) -> tuple:
+        """Uids the engine has accepted but not retired — running,
+        prefilling, or queued.  The censoring set for trace-end
+        percentile reports."""
+        live = [r.uid for r in self.slot_req if r is not None]
+        live += [r.uid for r in self.queue]
+        return tuple(live)
+
+    def _admit_open(self):
+        """Open-loop admission: same conservative capacity check as
+        ``_admit``, but the admitted request enters the chunked-prefill
+        state machine instead of being prefilled whole — long prompts
+        cost several engine steps, not one monolithic stall."""
+        for slot in range(self.slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            if not self._can_admit(self.queue[0]):
+                self.deferred_admissions += 1
+                return
+            req = self.queue.popleft()
+            full = self._prefix_tokens + len(req.prompt)
+            if not self._table.alloc_seq(slot, full,
+                                         prefix=self._prefix_pages):
+                raise RuntimeError(       # _can_admit guarantees it
+                    "shadow KV table out of pages at admission")
+            self.slot_req[slot] = req
+            done = self._prefix_tokens \
+                if self._prefix_pages is not None else 0
+            self._prefilling[slot] = [req, done, full]
+
+    def _retire_open(self, slot: int):
+        req = self.slot_req[slot]
+        req.done_s = self.sim_t
+        self.slot_req[slot] = None
+        self.n_finished += 1
+        self._lens[slot] = 0
+        self._table.free_seq(slot)
+
+    def _prefill_chunk_open(self, slot: int, chunk: int,
+                            est_prefill_s_per_token: float) -> float:
+        """Advance one slot's chunked prefill by one page-aligned span
+        and record its plan; on the last chunk the slot joins the
+        decode batch (its ``first token`` is the prefill's)."""
+        req, done, total = self._prefilling[slot]
+        end = total if total - done <= chunk else done + chunk
+        self._record(PlanRecord(
+            "prefill", self.stats.decode_steps, (slot,), (req.uid,),
+            self._table.prefill_plan(
+                slot, total, span=(done, end),
+                n_q_heads=self.cfg.n_heads, d_model=self.cfg.d_model,
+                d_ff=self.cfg.d_ff, n_layers=self.cfg.n_layers),
+            arrival_event=req.arrival_event, n_tokens=end - done))
+        self.stats.prefills += 1
+        if end == total:
+            del self._prefilling[slot]
+            self._lens[slot] = total
+            if not self._table.note_tokens(slot, total):
+                raise RuntimeError("shadow KV table out of pages")
+            self._remaining[slot] = req.max_new_tokens - 1
+            self.stats.tokens_out += 1
+            if self._remaining[slot] <= 0 or total >= self.max_seq - 1:
+                self._retire_open(slot)       # prefill-only request
+        else:
+            self._prefilling[slot][1] = end
+        return est_prefill_s_per_token * (end - done)
+
+    def _step_open(self, chunk: int, est_step_s: float,
+                   est_prefill_s_per_token: float) -> float:
+        """One open-loop engine iteration: advance every in-flight
+        chunked prefill by one span, then one batched decode step over
+        the slots not still prefilling.  Returns the simulated time
+        this step consumed (the admission clock — reported latencies
+        come from the accesys replay, not from these estimates)."""
+        dt = 0.0
+        for slot in sorted(self._prefilling):
+            dt += self._prefill_chunk_open(slot, chunk,
+                                           est_prefill_s_per_token)
+        active = [s for s, r in enumerate(self.slot_req)
+                  if r is not None and s not in self._prefilling]
+        if active:
+            self._record(PlanRecord(
+                "decode", self.stats.decode_steps, tuple(active),
+                tuple(self.slot_req[s].uid for s in active),
+                self._table.decode_step_plan(
+                    active, n_q_heads=self.cfg.n_heads,
+                    n_layers=self.cfg.n_layers)))
+            self.stats.decode_steps += 1
+            dt += est_step_s
+            for slot in active:
+                self._lens[slot] += 1
+                if not self._table.note_tokens(slot,
+                                               int(self._lens[slot])):
+                    raise RuntimeError("shadow KV table out of pages")
+                self.stats.tokens_out += 1
+                self._remaining[slot] -= 1
+                if self._remaining[slot] <= 0 or \
+                        int(self._lens[slot]) >= self.max_seq - 1:
+                    self._retire_open(slot)
+        return dt
+
+    def open_loop_records(self, requests, arrival_s, *,
+                          est_step_s: float = 1e-3,
+                          est_prefill_s_per_token: float = 1e-4,
+                          prefill_chunk_tokens: int = 64,
+                          max_steps: int = 1_000_000):
+        """Generator driving an OPEN-loop run — requests arrive on the
+        ``arrival_s`` clock whether or not the engine keeps up (the
+        queue grows past saturation) — yielding ``PlanRecord``s as they
+        are produced WITHOUT retaining them, so a 10k-request trace can
+        stream straight into ``replay_trace_streamed`` in O(chunk)
+        memory.  Plan-only: token values are never computed; the
+        ``est_*`` rates only advance the simulated admission clock
+        (calibrate them from a small priced probe trace — reported
+        TTFT/TPOT always come from the replay itself).
+
+        Deterministic: same requests + arrivals => identical records.
+        Use ``run_open_loop`` to retain the trace instead."""
+        if not self.plan_only or self._table is None:
+            raise ValueError(
+                "open_loop_records() needs plan_only=True (the jitted "
+                "model path is closed-loop only)")
+        if prefill_chunk_tokens % self._table.cfg.page_tokens:
+            raise ValueError(
+                f"prefill_chunk_tokens={prefill_chunk_tokens} must be "
+                f"page-aligned ({self._table.cfg.page_tokens} tokens)")
+        reqs = list(requests)
+        arr = np.asarray(arrival_s, float)
+        if len(reqs) != arr.size:
+            raise ValueError(
+                f"{len(reqs)} requests but {arr.size} arrival times")
+        buf: list = []
+        self._sink = buf
+        try:
+            if self._prefix_pages is not None and \
+                    not self._prefix_recorded:
+                self._prefix_recorded = True
+                self._record(PlanRecord(
+                    "prefill", 0, (), (-1,),
+                    self._table.shared_prefill_plan(
+                        self._prefix_pages, self._prefix_tokens,
+                        n_q_heads=self.cfg.n_heads,
+                        d_model=self.cfg.d_model, d_ff=self.cfg.d_ff,
+                        n_layers=self.cfg.n_layers),
+                    n_tokens=self._prefix_tokens))
+            i = 0
+            steps = 0
+            while i < len(reqs) or self.queue or \
+                    any(r is not None for r in self.slot_req):
+                if steps >= max_steps:
+                    break
+                busy = self.queue or \
+                    any(r is not None for r in self.slot_req)
+                if not busy and arr[i] > self.sim_t:
+                    self.sim_t = float(arr[i])    # idle: jump ahead
+                while i < len(reqs) and arr[i] <= self.sim_t:
+                    req = reqs[i]
+                    self.submit(req)
+                    req.submitted_s = float(arr[i])
+                    i += 1
+                self._admit_open()
+                self.sim_t += self._step_open(prefill_chunk_tokens,
+                                              est_step_s,
+                                              est_prefill_s_per_token)
+                steps += 1
+                yield from buf
+                buf.clear()
+        finally:
+            self._sink = None
+
+    def run_open_loop(self, requests, arrival_s, **kw) -> EngineStats:
+        """Open-loop run retaining the full trace (small-n paths and
+        tests; the load sweep streams ``open_loop_records`` instead)."""
+        for rec in self.open_loop_records(requests, arrival_s, **kw):
+            self.trace.append(rec)
         return self.stats

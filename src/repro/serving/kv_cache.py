@@ -58,27 +58,47 @@ class PageTable:
         self.tables = np.zeros((max_seqs, cfg.max_pages_per_seq), np.int32)
         self.lens = np.zeros((max_seqs,), np.int32)
         self.held = np.zeros((max_seqs,), np.int32)   # pages per slot
+        self.shared = np.zeros((max_seqs,), np.int32)  # leading shared
         self.active = np.zeros((max_seqs,), bool)
 
     # --------------------------------------------------- slot lifecycle
-    def alloc_seq(self, slot: int, prompt_len: int) -> bool:
+    def reserve_prefix(self, n_pages: int) -> np.ndarray:
+        """Permanently pop ``n_pages`` from the free list and return
+        their ids — the shared system-prompt pages of prefix caching.
+        Sequences allocated with ``prefix=`` map these as their leading
+        pages; ``free_seq`` never returns them (they outlive every
+        request)."""
+        if n_pages > len(self._free):
+            raise ValueError(
+                f"cannot reserve {n_pages} prefix pages: only "
+                f"{len(self._free)} free")
+        return np.array([self._free.pop() for _ in range(n_pages)],
+                        np.int32)
+
+    def alloc_seq(self, slot: int, prompt_len: int,
+                  prefix: Optional[np.ndarray] = None) -> bool:
         n_pages = -(-max(prompt_len, 1) // self.cfg.page_tokens)
-        if n_pages > len(self._free) or \
+        k = 0 if prefix is None else min(len(prefix), n_pages)
+        if n_pages - k > len(self._free) or \
                 n_pages > self.cfg.max_pages_per_seq:
             return False
         self.tables[slot, :] = 0
-        for i in range(n_pages):
+        for i in range(k):
+            self.tables[slot, i] = prefix[i]
+        for i in range(k, n_pages):
             self.tables[slot, i] = self._free.pop()
         self.lens[slot] = 0
         self.held[slot] = n_pages
+        self.shared[slot] = k
         self.active[slot] = True
         return True
 
     def free_seq(self, slot: int):
-        for i in range(int(self.held[slot])):
+        for i in range(int(self.shared[slot]), int(self.held[slot])):
             self._free.append(int(self.tables[slot, i]))
         self.lens[slot] = 0
         self.held[slot] = 0
+        self.shared[slot] = 0
         self.active[slot] = False
 
     def ensure_capacity(self, slot: int, new_len: int) -> bool:
@@ -135,11 +155,14 @@ class PageTable:
                      *, n_q_heads: Optional[int] = None,
                      d_model: Optional[int] = None,
                      d_ff: Optional[int] = None, n_layers: int = 1,
+                     span: Optional[tuple] = None,
                      out: str = "prefill_out"):
         """StreamPlan for prefilling ``slot``'s prompt into the pages
         it holds (chunked causal QK/PV over the freshly written pool
         pages + weight-streaming GEMMs) — see
-        ``core.plan.prefill_plan``."""
+        ``core.plan.prefill_plan``.  ``span=(t0, t1)`` prefills only
+        that page-aligned token window (chunked prefill: one long
+        prompt split across engine steps)."""
         from repro.core import plan as plan_ir
         held = int(self.held[slot])
         if prompt_len is None:
@@ -149,8 +172,25 @@ class PageTable:
             self.tables[slot, :held], prompt_len, self.cfg.page_tokens,
             self.cfg.n_kv_heads, self.cfg.head_dim,
             _np_itemsize(self.cfg.dtype), n_q_heads=n_q_heads,
-            d_model=d_model, d_ff=d_ff, n_layers=n_layers, out=out,
-            name=f"prefill.s{slot}")
+            d_model=d_model, d_ff=d_ff, n_layers=n_layers, span=span,
+            out=out, name=f"prefill.s{slot}")
+
+    def shared_prefill_plan(self, pages: np.ndarray, prompt_len: int,
+                            *, n_q_heads: Optional[int] = None,
+                            d_model: Optional[int] = None,
+                            d_ff: Optional[int] = None,
+                            n_layers: int = 1, out: str = "prefix_out"):
+        """StreamPlan prefilling a shared page run (the prefix-cache
+        system prompt) that belongs to no slot — priced once per trace;
+        every later request re-streams these pages during attention,
+        which is where the cross-request LLC/TLB reuse win shows up."""
+        from repro.core import plan as plan_ir
+        return plan_ir.prefill_plan(
+            np.asarray(pages, np.int32), prompt_len,
+            self.cfg.page_tokens, self.cfg.n_kv_heads,
+            self.cfg.head_dim, _np_itemsize(self.cfg.dtype),
+            n_q_heads=n_q_heads, d_model=d_model, d_ff=d_ff,
+            n_layers=n_layers, out=out, name="prefix")
 
     @property
     def pages_in_use(self) -> int:

@@ -2,28 +2,35 @@
 back onto the recorded request timeline.
 
 ``ServingEngine(record_plans=True)`` leaves behind a plan trace — one
-``prefill_plan`` per admission and one multi-layer decode plan per
-engine step, each tagged ``(step_idx, slot -> uid)``.  This module
-prices the WHOLE trace in one compiled replay
-(``accesys.pipeline.replay_trace`` — shared page interning, one
-continuous timeline) and attributes the per-event simulated durations
-to individual requests:
+``prefill_plan`` per admission (one per CHUNK under chunked-prefill
+admission) and one multi-layer decode plan per engine step, each
+tagged ``(step_idx, slot -> uid)``.  This module prices the WHOLE
+trace in one compiled replay (``accesys.pipeline.replay_trace``, or
+the chunk-streamed ``replay_trace_streamed`` for open-loop scale —
+shared page interning, one continuous timeline) and attributes the
+per-record simulated durations to individual requests:
 
   * simulated TTFT — trace time at the request's prefill completion
-    (the prefill emits the first token) minus its arrival time, so
-    queueing/deferral delay is included;
+    (the LAST prefill chunk emits the first token) minus its arrival
+    time, so queueing/deferral delay is included;
   * simulated TPOT — (last decode-token time - prefill completion) /
     decoded tokens.
 
-``percentiles()`` reduces those per-request latencies to the
-p50/p95/p99 numbers a serving SLO speaks — per memory mode, these are
-the first user-facing latency figures the simulator emits.
+Edge cases are reported as CENSORED, never dropped silently or left
+to skew the tails: a request still in flight when the trace ends
+contributes no TPOT (its decode is truncated) and, if it never
+finished prefilling, no TTFT either; prefill-only requests
+(``max_new_tokens == 1``: zero decode steps) have ``tpot_s = nan``
+and are counted.  ``percentiles()`` filters the nans and carries the
+counts, so the p50/p95/p99 numbers a serving SLO speaks stay honest
+at every load point — including past the saturation knee, where the
+in-flight fraction grows.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -35,9 +42,21 @@ from repro.core import plan as plan_ir
 class RequestSim:
     """Simulated latency of one served request."""
     uid: int
-    ttft_s: float                  # arrival -> first token (simulated)
-    tpot_s: float                  # per decoded token (nan if none)
+    ttft_s: float                  # arrival -> first token (nan if the
+    #                                prefill never completed)
+    tpot_s: float                  # per decoded token (nan if none or
+    #                                censored)
     n_tokens: int                  # tokens attributed (prefill + decode)
+    censored: bool = False         # still in flight at trace end
+
+
+class RecMeta(NamedTuple):
+    """The O(1) per-record metadata request folding needs — what a
+    streaming accumulator keeps when the plans themselves are not
+    retained."""
+    kind: str
+    uids: tuple
+    arrival_event: int
 
 
 @dataclasses.dataclass
@@ -49,11 +68,19 @@ class ServingSimReport:
     result: object                 # aggregate accesys GemmResult
 
     def percentiles(self) -> dict:
-        """{ttft,tpot}_{p50,p95,p99}_us over the trace's requests."""
+        """{ttft,tpot}_{p50,p95,p99}_us over the trace's requests,
+        plus censoring counters: ``n_in_flight`` (still running or
+        queued at trace end — no TPOT contribution) and
+        ``n_prefill_only`` (finished with zero decode steps)."""
         ttft = np.array([r.ttft_s for r in self.requests])
+        ttft = ttft[~np.isnan(ttft)]
         tpot = np.array([r.tpot_s for r in self.requests])
         tpot = tpot[~np.isnan(tpot)]
-        out = {"requests": len(self.requests)}
+        out = {"requests": len(self.requests),
+               "n_in_flight": sum(r.censored for r in self.requests),
+               "n_prefill_only": sum(
+                   1 for r in self.requests
+                   if not r.censored and r.n_tokens <= 1)}
         for label, arr in (("ttft", ttft), ("tpot", tpot)):
             for p in (50, 95, 99):
                 out[f"{label}_p{p}_us"] = float(
@@ -70,18 +97,21 @@ def trace_schedule(trace: Sequence) -> "plan_ir.PlanSchedule":
                                 [(r.plan, 1) for r in trace])
 
 
-def simulate_serving_trace(cfg, trace: Sequence, *,
-                           host_s_per_elem: float = HOST_S_PER_ELEM,
-                           engine: Optional[str] = None,
-                           sched: Optional["plan_ir.PlanSchedule"]
-                           = None) -> ServingSimReport:
-    """Replay a recorded engine trace once (batched) on ``cfg`` and
-    attribute simulated time to requests.  ``trace`` is
-    ``ServingEngine.trace`` (a list of ``PlanRecord``)."""
-    sched = sched if sched is not None else trace_schedule(trace)
-    result, per = replay_trace(cfg, sched,
-                               host_s_per_elem=host_s_per_elem,
-                               engine=engine)
+def fold_requests(trace: Sequence, per: np.ndarray,
+                  in_flight: Sequence = ()) -> list:
+    """Attribute per-record durations to requests.  ``trace`` is any
+    sequence exposing ``kind / uids / arrival_event`` per record
+    (``PlanRecord``s or ``RecMeta``s); ``per`` the matching replay
+    durations; ``in_flight`` the uids the engine had not retired when
+    the trace ended (``ServingEngine.unfinished_uids()``).
+
+    Handles chunked prefills (a uid's arrival anchors at its FIRST
+    prefill record, completion at its LAST), skips the shared
+    prefix-cache record (``uid < 0`` — its duration stays on the
+    timeline but belongs to no request), and censors in-flight
+    requests: truncated decodes contribute no TPOT, and an in-flight
+    request with no decode steps is conservatively treated as still
+    prefilling (``ttft_s = nan``)."""
     cum = np.cumsum(per)
     arrival: dict = {}
     prefill_done: dict = {}
@@ -90,23 +120,74 @@ def simulate_serving_trace(cfg, trace: Sequence, *,
     order: list = []
     for i, rec in enumerate(trace):
         if rec.kind == "prefill":
-            uid = rec.uids[0]
-            order.append(uid)
-            ae = rec.arrival_event
-            arrival[uid] = float(cum[ae - 1]) if ae > 0 else 0.0
+            uid = rec.uids[0] if rec.uids else -1
+            if uid < 0:          # shared prefix prefill: no request
+                continue
+            if uid not in arrival:
+                order.append(uid)
+                ae = rec.arrival_event
+                arrival[uid] = float(cum[ae - 1]) if ae > 0 else 0.0
             prefill_done[uid] = float(cum[i])
         else:
             for uid in rec.uids:
                 last_tok[uid] = float(cum[i])
                 n_decode[uid] = n_decode.get(uid, 0) + 1
+    live = set(in_flight)
     requests = []
     for uid in order:
         nd = n_decode.get(uid, 0)
-        tpot = (last_tok[uid] - prefill_done[uid]) / nd if nd else \
-            math.nan
+        cens = uid in live
+        tpot = (last_tok[uid] - prefill_done[uid]) / nd \
+            if nd and not cens else math.nan
+        ttft = math.nan if cens and nd == 0 else \
+            prefill_done[uid] - arrival[uid]
         requests.append(RequestSim(
-            uid=uid, ttft_s=prefill_done[uid] - arrival[uid],
-            tpot_s=tpot, n_tokens=1 + nd))
+            uid=uid, ttft_s=ttft, tpot_s=tpot, n_tokens=1 + nd,
+            censored=cens))
+    return requests
+
+
+class ServingAccumulator:
+    """Streaming counterpart of ``fold_requests``: tee the O(1) fold
+    metadata off a record generator while the plans stream through to
+    the replayer UNRETAINED, then fold the per-plan durations the
+    replay returns.  Memory is O(records), never O(events) — the
+    per-event timeline only ever exists one replay chunk at a time."""
+
+    def __init__(self):
+        self.meta: list = []
+
+    def wrap(self, records):
+        """Pass-through generator collecting fold metadata."""
+        for rec in records:
+            self.meta.append(RecMeta(rec.kind, rec.uids,
+                                     rec.arrival_event))
+            yield rec
+
+    def report(self, mode: str, result, per: np.ndarray,
+               in_flight: Sequence = ()) -> ServingSimReport:
+        return ServingSimReport(
+            mode=mode, total_s=result.total_s, per_event_s=per,
+            requests=fold_requests(self.meta, per, in_flight),
+            result=result)
+
+
+def simulate_serving_trace(cfg, trace: Sequence, *,
+                           host_s_per_elem: float = HOST_S_PER_ELEM,
+                           engine: Optional[str] = None,
+                           sched: Optional["plan_ir.PlanSchedule"]
+                           = None,
+                           in_flight: Sequence = ()
+                           ) -> ServingSimReport:
+    """Replay a recorded engine trace once (batched) on ``cfg`` and
+    attribute simulated time to requests.  ``trace`` is
+    ``ServingEngine.trace`` (a list of ``PlanRecord``)."""
+    sched = sched if sched is not None else trace_schedule(trace)
+    result, per = replay_trace(cfg, sched,
+                               host_s_per_elem=host_s_per_elem,
+                               engine=engine)
     return ServingSimReport(mode=cfg.mode, total_s=result.total_s,
-                            per_event_s=per, requests=requests,
+                            per_event_s=per,
+                            requests=fold_requests(trace, per,
+                                                   in_flight),
                             result=result)

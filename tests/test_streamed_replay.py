@@ -1,0 +1,330 @@
+"""Streaming chunked trace replay: parity, determinism, censoring.
+
+The tentpole contract under test: ``replay_trace_streamed`` is
+BITWISE identical (rtol 0, every ``GemmResult`` field, all three
+memory modes) to the monolithic ``replay_trace`` at any chunk size —
+including chunk sizes that split a request's prefill chunks and
+decode steps across replay chunks — while touching only O(chunk)
+state at a time.  Plus the open-loop serving machinery the scale
+unlocks: seeded arrival processes, chunked-prefill admission, prefix
+caching, and censored percentile edge cases.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.accesys.pipeline import (_SCRATCH_POOL, release_scratch,
+                                    replay_trace, replay_trace_streamed)
+from repro.core import plan as plan_ir
+from repro.core.scenario import MODES, Scenario, system_for
+from repro.serving.engine import Request, ServingEngine, arrival_times
+from repro.serving.sim_report import ServingAccumulator, fold_requests
+
+
+def _cfgs():
+    return [system_for(Scenario(model="serve", mode=m)) for m in MODES]
+
+
+def _requests(n, seed=7, max_new_lo=1, max_new_hi=8,
+              prompt_lo=4, prompt_hi=20):
+    rng = np.random.default_rng(seed)
+    return [Request(
+        uid=i,
+        prompt=rng.integers(1, 250,
+                            size=int(rng.integers(prompt_lo,
+                                                  prompt_hi))
+                            ).astype(np.int32),
+        max_new_tokens=int(rng.integers(max_new_lo, max_new_hi)))
+        for i in range(n)]
+
+
+def _open_loop_engine(**kw):
+    from repro.configs import get_reduced
+    kw.setdefault("slots", 3)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("kv_page_tokens", 8)
+    return ServingEngine(get_reduced("qwen2_0_5b"), plan_only=True,
+                         **kw)
+
+
+def _open_loop_trace(n_requests, *, seed=7, qps=200.0, engine_kw=None,
+                     run_kw=None, req_kw=None):
+    eng = _open_loop_engine(**(engine_kw or {}))
+    arr = arrival_times("poisson", n_requests, qps, seed=3)
+    eng.run_open_loop(_requests(n_requests, seed=seed,
+                                **(req_kw or {})), arr,
+                      prefill_chunk_tokens=8, **(run_kw or {}))
+    return eng
+
+
+def _assert_bitwise(res_a, per_a, res_b, per_b, label=""):
+    for f in dataclasses.fields(res_a):
+        a, b = getattr(res_a, f.name), getattr(res_b, f.name)
+        assert a == b, (label, f.name, a, b)
+    assert np.array_equal(per_a, per_b), (label, "per_plan")
+
+
+# ================================================== bitwise parity
+class TestStreamedParity:
+    def test_matches_monolithic_28_requests(self):
+        """The 28-request open-loop trace, random chunk sizes that
+        split requests mid-flight, every field, all three modes."""
+        eng = _open_loop_trace(28)
+        plans = [r.plan for r in eng.trace]
+        cfgs = _cfgs()
+        mono = [replay_trace(c, plans) for c in cfgs]
+        rng = np.random.default_rng(0)
+        sizes = [1, *rng.integers(50, 5000, size=3), 10**9]
+        for chunk in sizes:
+            res, pers = replay_trace_streamed(cfgs, plans,
+                                              chunk_events=int(chunk))
+            for (mr, mp), r, p, c in zip(mono, res, pers, cfgs):
+                _assert_bitwise(mr, mp, r, p,
+                                label=f"chunk={chunk} mode={c.mode}")
+
+    def test_matches_monolithic_1k_requests(self):
+        """>= 1k requests — the scale the streaming path exists for —
+        still bitwise at a mid-request chunk size, all modes."""
+        eng = _open_loop_trace(
+            1000, qps=2000.0,
+            engine_kw=dict(slots=4, max_seq=32),
+            run_kw=dict(est_step_s=1e-4,
+                        est_prefill_s_per_token=1e-5),
+            req_kw=dict(max_new_lo=1, max_new_hi=3,
+                        prompt_lo=4, prompt_hi=10))
+        plans = [r.plan for r in eng.trace]
+        n_ev = sum(len(p.events) for p in plans)
+        assert len(plans) >= 1000 and n_ev > 200_000
+        cfgs = _cfgs()
+        mono = [replay_trace(c, plans) for c in cfgs]
+        res, pers = replay_trace_streamed(cfgs, plans,
+                                          chunk_events=32_768)
+        for (mr, mp), r, p, c in zip(mono, res, pers, cfgs):
+            _assert_bitwise(mr, mp, r, p, label=c.mode)
+
+    def test_matches_on_scenario_serve_trace(self):
+        """The JAX-engine closed-loop scenario trace (the seed's
+        existing serve path) prices identically when streamed."""
+        from repro.core.scenario import _serve_trace
+        trace, sched = _serve_trace(Scenario(model="serve"))
+        cfg = _cfgs()[0]
+        mres, mper = replay_trace(cfg, sched)
+        sres, sper = replay_trace_streamed(
+            cfg, [pl for pl, _ in sched.segments], chunk_events=700)
+        _assert_bitwise(mres, mper, sres, sper)
+
+    def test_config_dedup_and_single_cfg_form(self):
+        eng = _open_loop_trace(6)
+        plans = [r.plan for r in eng.trace]
+        dm, dc, dev = _cfgs()
+        dm2 = _cfgs()[0]
+        res, pers = replay_trace_streamed([dm, dc, dm2], plans,
+                                          chunk_events=999)
+        _assert_bitwise(res[0], pers[0], res[2], pers[2])
+        assert res[0] is not res[2]       # fanned out, not aliased
+        one, per1 = replay_trace_streamed(dm, plans, chunk_events=999)
+        _assert_bitwise(res[0], pers[0], one, per1)
+
+    def test_callable_factory_two_pass(self):
+        """A zero-arg factory (the O(chunk)-memory form) discovers the
+        footprint on pass 1 and prices on pass 2 — same result as a
+        materialized list with an explicit footprint."""
+        eng = _open_loop_trace(8)
+        plans = [r.plan for r in eng.trace]
+        foot = plan_ir.trace_footprint(plans)
+        cfg = _cfgs()[1]
+        a = replay_trace_streamed(cfg, lambda: iter(plans),
+                                  chunk_events=512)
+        b = replay_trace_streamed(cfg, plans, footprint_pages=foot,
+                                  chunk_events=512)
+        _assert_bitwise(a[0], a[1], b[0], b[1])
+
+    def test_rejects_sampled_and_empty(self):
+        from repro.core.plan import gemm_plan
+        sampled = gemm_plan(512, 512, 4096, np.int8,
+                            sample_stride=4)
+        assert sampled.sampled_steps != sampled.total_steps
+        cfg = _cfgs()[0]
+        with pytest.raises(ValueError, match="exact"):
+            replay_trace_streamed(cfg, [sampled])
+        with pytest.raises(ValueError, match="plan"):
+            replay_trace_streamed(cfg, [])
+
+
+# ============================================== arrival determinism
+class TestArrivals:
+    @pytest.mark.parametrize("kind", ["poisson", "bursty", "diurnal"])
+    def test_seeded_determinism(self, kind):
+        a = arrival_times(kind, 500, 25.0, seed=11)
+        b = arrival_times(kind, 500, 25.0, seed=11)
+        assert np.array_equal(a, b)
+        c = arrival_times(kind, 500, 25.0, seed=12)
+        assert not np.array_equal(a, c)
+        assert np.all(np.diff(a) >= 0) and a[0] >= 0
+        # mean offered rate in the right ballpark
+        rate = 500 / a[-1]
+        assert 25.0 / 3 < rate < 25.0 * 3
+
+    def test_bad_inputs(self):
+        with pytest.raises(ValueError):
+            arrival_times("weibull", 10, 1.0)
+        with pytest.raises(ValueError):
+            arrival_times("poisson", 10, 0.0)
+
+    def test_open_loop_trace_determinism(self):
+        """Same seed => identical trace (record kinds, uids, plan
+        names, event counts and page ids)."""
+        runs = []
+        for _ in range(2):
+            eng = _open_loop_trace(
+                10, engine_kw=dict(prefix_tokens=16,
+                                   prefix_caching=True))
+            runs.append([
+                (r.kind, r.uids, r.arrival_event, r.n_tokens,
+                 r.plan.name, len(r.plan.events),
+                 tuple(ev.page for ev in r.plan.events[:5]))
+                for r in eng.trace])
+        assert runs[0] == runs[1]
+
+
+# ================================================ censored reports
+class TestCensoredReport:
+    def test_prefill_only_requests(self):
+        """max_new_tokens=1 requests decode zero tokens: tpot is nan,
+        counted, percentiles never crash."""
+        eng2 = _open_loop_engine(slots=2)
+        reqs = _requests(6, seed=5, max_new_lo=1, max_new_hi=2)
+        eng2.run_open_loop(reqs, np.zeros(6), prefill_chunk_tokens=8)
+        cfg = _cfgs()[0]
+        from repro.serving.sim_report import simulate_serving_trace
+        rep = simulate_serving_trace(cfg, eng2.trace)
+        p = rep.percentiles()
+        assert p["n_prefill_only"] == len(reqs)
+        assert p["n_in_flight"] == 0
+        assert all(math.isnan(r.tpot_s) for r in rep.requests)
+        assert math.isnan(p["tpot_p99_us"])
+        assert not math.isnan(p["ttft_p99_us"])
+
+    def test_in_flight_censoring(self):
+        """Truncating the run mid-flight censors unfinished requests:
+        no TPOT contribution, nan TTFT for still-prefilling uids, and
+        the counter reports them."""
+        eng = _open_loop_engine(slots=2)
+        reqs = _requests(8, seed=9, max_new_lo=6, max_new_hi=12)
+        eng.run_open_loop(reqs, np.zeros(8), prefill_chunk_tokens=8,
+                          max_steps=6)
+        live = eng.unfinished_uids()
+        assert live                       # truncation left work behind
+        cfg = _cfgs()[0]
+        from repro.serving.sim_report import simulate_serving_trace
+        rep = simulate_serving_trace(cfg, eng.trace, in_flight=live)
+        p = rep.percentiles()
+        assert p["n_in_flight"] == sum(r.censored for r in rep.requests)
+        assert p["n_in_flight"] > 0
+        for r in rep.requests:
+            if r.censored:
+                assert math.isnan(r.tpot_s)
+        # uncensored folding of the same truncated trace would skew:
+        # the censored report must not include truncated decodes
+        rep_skewed = simulate_serving_trace(cfg, eng.trace)
+        n_tpot = sum(0 if math.isnan(r.tpot_s) else 1
+                     for r in rep.requests)
+        n_tpot_skewed = sum(0 if math.isnan(r.tpot_s) else 1
+                            for r in rep_skewed.requests)
+        assert n_tpot <= n_tpot_skewed
+
+    def test_accumulator_matches_direct_fold(self):
+        """Streaming accumulator (metadata teed off a generator) folds
+        identically to fold_requests over the retained trace."""
+        eng = _open_loop_trace(10)
+        per = np.linspace(1e-6, 2e-6, len(eng.trace))
+        direct = fold_requests(eng.trace, per, in_flight=())
+        acc = ServingAccumulator()
+        for _ in acc.wrap(iter(eng.trace)):
+            pass
+        streamed = fold_requests(acc.meta, per, in_flight=())
+        assert direct == streamed
+
+
+# ======================================== prefix caching & spans
+class TestPrefixAndSpans:
+    def test_prefill_span_default_identity(self):
+        """span=(0, T) produces the byte-identical plan the builder
+        has always produced."""
+        tbl = np.arange(10, 16, dtype=np.int32)
+        kw = dict(n_q_heads=4, d_model=64, d_ff=128, n_layers=2)
+        full = plan_ir.prefill_plan(tbl, 44, 8, 2, 16, 2, **kw)
+        spanned = plan_ir.prefill_plan(tbl, 44, 8, 2, 16, 2,
+                                       span=(0, 44), **kw)
+        assert len(full.events) == len(spanned.events)
+        assert full.macs == spanned.macs
+        for a, b in zip(full.events, spanned.events):
+            assert (a.kind, a.page, a.nbytes, a.lane, a.deps, a.op) \
+                == (b.kind, b.page, b.nbytes, b.lane, b.deps, b.op)
+
+    def test_prefill_span_chunks_cover_full_macs(self):
+        """Chunked spans attend the same causal structure: summed MACs
+        equal the monolithic prefill's."""
+        tbl = np.arange(10, 16, dtype=np.int32)
+        kw = dict(n_q_heads=4, d_model=64, d_ff=128, n_layers=1)
+        full = plan_ir.prefill_plan(tbl, 44, 8, 2, 16, 2, **kw)
+        chunks = [plan_ir.prefill_plan(tbl, 44, 8, 2, 16, 2,
+                                       span=(s0, s1), **kw)
+                  for s0, s1 in ((0, 16), (16, 32), (32, 44))]
+        assert sum(c.macs for c in chunks) == full.macs
+        with pytest.raises(ValueError):
+            plan_ir.prefill_plan(tbl, 44, 8, 2, 16, 2, span=(3, 16),
+                                 **kw)
+        with pytest.raises(ValueError):
+            plan_ir.prefill_plan(tbl, 44, 8, 2, 16, 2, span=(0, 15),
+                                 **kw)
+
+    def test_reserve_prefix_pages_outlive_requests(self):
+        from repro.serving.kv_cache import PagedCacheConfig, PageTable
+        t = PageTable(PagedCacheConfig(
+            n_pages=16, page_tokens=8, n_kv_heads=2, head_dim=16,
+            max_pages_per_seq=8, dtype="float16"), max_seqs=2)
+        pfx = t.reserve_prefix(2)
+        assert len(pfx) == 2 and t.pages_in_use == 2
+        assert t.alloc_seq(0, 32, prefix=pfx)
+        assert list(t.tables[0, :2]) == list(pfx)
+        assert int(t.shared[0]) == 2 and int(t.held[0]) == 4
+        assert t.pages_in_use == 4       # 2 shared + 2 own
+        t.free_seq(0)
+        # own pages returned, shared pages still reserved
+        assert t.pages_in_use == 2
+
+    def test_prefix_caching_shrinks_trace(self):
+        n = 10
+        arr = arrival_times("poisson", n, 100.0, seed=3)
+        traces = {}
+        for caching in (False, True):
+            eng = _open_loop_engine(prefix_tokens=16,
+                                    prefix_caching=caching)
+            eng.run_open_loop(_requests(n), arr,
+                              prefill_chunk_tokens=8)
+            assert eng.n_finished == n
+            traces[caching] = eng.trace
+        # cached: one shared prefix record replaces per-request spans
+        assert len(traces[True]) < len(traces[False])
+        assert traces[True][0].uids == (-1,)
+        assert all(r.uids != (-1,) for r in traces[False])
+        cfg = _cfgs()[1]
+        tot = {c: replay_trace(cfg, [r.plan for r in tr])[0].total_s
+               for c, tr in traces.items()}
+        assert tot[True] < tot[False]     # the measurable reuse win
+
+
+# ==================================================== scratch pool
+class TestScratchPool:
+    def test_release_scratch(self):
+        from repro.accesys.pipeline import replay_batch
+        from repro.core.plan import gemm_plan
+        pl = gemm_plan(256, 256, 512, np.int8)
+        replay_batch(_cfgs(), pl)
+        assert _SCRATCH_POOL          # batched pricing leaves scratch
+        freed = release_scratch()
+        assert freed > 0 and not _SCRATCH_POOL
+        assert release_scratch() == 0
