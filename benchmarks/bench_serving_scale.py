@@ -12,7 +12,11 @@ run would record) and prices them for all three memory modes in ONE
   * ``serve_10k`` — 10,000 requests (multi-million events).  The
     trace is never materialized: the engine record generator feeds
     the replayer through the zero-arg factory form, one pass to
-    discover the footprint, one to price, O(chunk) live memory.
+    discover the footprint, one to price, O(chunk) live memory;
+  * ``serve_preempt_1k`` — the 1k workload on a pressure-capped KV
+    pool with ``preempt="lifo"``: admission stalls evict victims and
+    the trace carries their swap-out/swap-in DMA, pricing the
+    swap-thrash regime end to end.
 
 Writes the usual CSV rows plus ``BENCH_serving_scale.json`` at the
 repo root (schema ``serving_scale/v1``) — events/sec and wall-clock
@@ -48,6 +52,11 @@ SEED = 0
 ENGINE_KW = dict(slots=8, max_seq=64, kv_page_tokens=8)
 RUN_KW = dict(est_step_s=1e-4, est_prefill_s_per_token=1e-5,
               prefill_chunk_tokens=16)
+# memory-pressure variant: the pool holds just TWO worst-case
+# requests (2 pages each) so admission stalls preempt + swap instead
+# of merely deferring
+PREEMPT_ENGINE_KW = dict(kv_pool_pages=4)
+PREEMPT_RUN_KW = dict(preempt="lifo")
 
 
 def build_requests(n: int, seed: int = SEED) -> list:
@@ -60,31 +69,34 @@ def build_requests(n: int, seed: int = SEED) -> list:
         for i in range(n)]
 
 
-def mk_engine(prefix_tokens: int = 0, caching: bool = False
-              ) -> ServingEngine:
+def mk_engine(prefix_tokens: int = 0, caching: bool = False,
+              **engine_kw) -> ServingEngine:
     return ServingEngine(get_reduced("qwen2_0_5b"), plan_only=True,
                          prefix_tokens=prefix_tokens,
-                         prefix_caching=caching, **ENGINE_KW)
+                         prefix_caching=caching,
+                         **{**ENGINE_KW, **engine_kw})
 
 
-def record_stream(n: int, seed: int = SEED, **engine_kw):
+def record_stream(n: int, seed: int = SEED, run_kw=None, **engine_kw):
     """A FRESH engine + open-loop record generator — deterministic,
     so successive calls replay the identical trace without ever
     holding it in memory."""
     eng = mk_engine(**engine_kw)
     arr = arrival_times("poisson", n, QPS, seed=seed)
     return eng, eng.open_loop_records(build_requests(n, seed), arr,
-                                      **RUN_KW)
+                                      **{**RUN_KW, **(run_kw or {})})
 
 
-def stream_price(n: int, cfgs):
+def stream_price(n: int, cfgs, run_kw=None, **engine_kw):
     """Two-pass O(chunk) pricing of the n-request trace: pass 1 walks
     the record stream for the footprint + counts, pass 2 streams the
     plans straight into the chunked replayer."""
     counts = {"records": 0, "events": 0}
+    engines = []
 
     def plans_pass1():
-        _, gen = record_stream(n)
+        eng, gen = record_stream(n, run_kw=run_kw, **engine_kw)
+        engines.append(eng)
         for rec in gen:
             counts["records"] += 1
             counts["events"] += len(rec.plan.events)
@@ -93,9 +105,11 @@ def stream_price(n: int, cfgs):
     t0 = time.perf_counter()
     foot = trace_footprint(plans_pass1())
     gen_s = time.perf_counter() - t0
+    counts["preemptions"] = engines[0].stats.preemptions
+    counts["swapped_pages"] = engines[0].stats.swapped_pages
 
     def factory():
-        _, gen = record_stream(n)
+        _, gen = record_stream(n, run_kw=run_kw, **engine_kw)
         return (rec.plan for rec in gen)
 
     t0 = time.perf_counter()
@@ -120,8 +134,14 @@ def main():
               "qps": QPS, "engine": ENGINE_KW, "workloads": {}}
     cfgs = [system_for(Scenario(model="serve", mode=m)) for m in MODES]
 
-    for name, n in (("serve_1k", 1_000), ("serve_10k", 10_000)):
-        results, foot, counts, gen_s, price_s = stream_price(n, cfgs)
+    workloads = (
+        ("serve_1k", 1_000, None, {}),
+        ("serve_10k", 10_000, None, {}),
+        ("serve_preempt_1k", 1_000, PREEMPT_RUN_KW, PREEMPT_ENGINE_KW),
+    )
+    for name, n, run_kw, engine_kw in workloads:
+        results, foot, counts, gen_s, price_s = stream_price(
+            n, cfgs, run_kw=run_kw, **engine_kw)
         ev = counts["events"]
         # the factory regenerates the plan stream inside the priced
         # pass; pass 1 measured that generation cost alone, so the
@@ -137,9 +157,16 @@ def main():
               "events_per_s": round(evs),
               "total_s": {m: r.total_s
                           for m, r in zip(MODES, results)}}
+        if run_kw:
+            wl["preempt"] = run_kw.get("preempt", "none")
+            wl["kv_pool_pages"] = engine_kw.get("kv_pool_pages")
+            wl["preemptions"] = counts["preemptions"]
+            wl["swapped_pages"] = counts["swapped_pages"]
         rows.append((f"{name}.streamed", round(price_s * 1e6, 1),
                      f"events={ev};ev_per_s={evs:,.0f};"
-                     f"modes={len(MODES)}"))
+                     f"modes={len(MODES)}"
+                     + (f";preemptions={counts['preemptions']}"
+                        if run_kw else "")))
         report["workloads"][name] = wl
         release_scratch()
 

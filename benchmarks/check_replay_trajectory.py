@@ -177,6 +177,52 @@ def main(argv=None) -> int:
                   f">{args.threshold:.1f}x vs BENCH_serving_scale.json")
             return 1
         print("OK: streamed serving replay within threshold")
+
+        pwl = sv["workloads"].get("serve_preempt_1k")
+        if pwl is not None:
+            # swap-thrash variant: same deterministic trace on a
+            # pressure-capped pool with preemption — the swap DMA
+            # records ride the priced path, so a regression in the
+            # swap lane shows up here and nowhere else
+            try:
+                from benchmarks.bench_serving_scale import (
+                    PREEMPT_ENGINE_KW, PREEMPT_RUN_KW)
+            except ImportError:
+                from bench_serving_scale import (PREEMPT_ENGINE_KW,
+                                                 PREEMPT_RUN_KW)
+            eng, gen = record_stream(pwl["requests"],
+                                     run_kw=PREEMPT_RUN_KW,
+                                     **PREEMPT_ENGINE_KW)
+            plans = [rec.plan for rec in gen]
+            if eng.stats.preemptions != pwl["preemptions"]:
+                print(f"note: preempt trace now has "
+                      f"{eng.stats.preemptions} preemptions (artifact:"
+                      f" {pwl['preemptions']}) — engine changed")
+            n_ev = sum(len(p.events) for p in plans)
+            pswall = float("inf")
+            for _ in range(2):
+                release_scratch()
+                t0 = time.perf_counter()
+                replay_trace_streamed(cfgs, plans,
+                                      chunk_events=CHUNK_EVENTS)
+                pswall = min(pswall, time.perf_counter() - t0)
+            got_pevs = 3 * n_ev / pswall
+            expect_pevs = pwl["events_per_s"] / host_factor
+            pratio = expect_pevs / max(got_pevs, 1e-9)
+            print(f"preempt serving replay: {n_ev} events "
+                  f"({eng.stats.preemptions} preemptions, "
+                  f"{eng.stats.swapped_pages} pages swapped), 3-mode "
+                  f"chunked pass {pswall:.3f}s -> {got_pevs:,.0f} ev/s"
+                  f" (artifact {pwl['events_per_s']:,.0f} ev/s, host "
+                  f"factor {host_factor:.2f}x -> expected "
+                  f"{expect_pevs:,.0f} ev/s, slowdown {pratio:.2f}x, "
+                  f"threshold {args.threshold:.1f}x)")
+            if pratio > args.threshold:
+                print("FAIL: preemption serving replay regressed "
+                      f">{args.threshold:.1f}x vs "
+                      "BENCH_serving_scale.json")
+                return 1
+            print("OK: preemption serving replay within threshold")
     return 0
 
 

@@ -1342,3 +1342,58 @@ def prefill_plan(page_table: Sequence[int], prompt_len: int,
         inp = out_name
     tag = "" if span is None else f".{s0}-{s1}"
     return concat(plans, name=f"{name}{T}t{n_layers}l{tag}")
+
+
+# ---------------------------------------------------------------- swap
+SWAP_LANE = 2      # DMA channel for KV swap traffic (A=0, B=1)
+
+
+def swap_plan(n_pages: int, page_tokens: int, n_kv_heads: int,
+              head_dim: int, elem: int, *, direction: str, tag,
+              n_layers: int = 1, k: str = "k", v: str = "v",
+              name: Optional[str] = None) -> StreamPlan:
+    """Page-aligned KV swap between the device pool and host memory —
+    the preemption path priced as ordinary DMA traffic.
+
+    ``direction="out"`` emits one DMA_OUT per resident K and V page
+    per layer (the victim's KV streamed to a host swap region);
+    ``direction="in"`` emits the matching DMA_INs on resume.  Swap
+    pages live in their own SMMU namespace (``L{i}.k.swap`` /
+    ``L{i}.v.swap``) keyed ``(tag, page_index)`` — ``tag`` (the
+    request uid) makes the host region stable across a request's
+    swap-out/swap-in pair, so the LLC/TLB models see the swap-in
+    re-touch exactly the pages the swap-out wrote, and a second
+    preemption of the same request reuses its region.  Swap-in DMAs
+    ride a dedicated lane (``SWAP_LANE``) so they group as their own
+    transfer stream, not as attention operand traffic.
+
+    The result is an exact repeat-1 ``StreamPlan`` like every other
+    serving record, so swap-bearing traces flow through
+    ``replay_trace`` / ``replay_trace_streamed`` unchanged (and stay
+    bitwise-identical under chunking)."""
+    if direction not in ("out", "in"):
+        raise ValueError(f"direction must be 'out' or 'in': {direction}")
+    if n_pages < 1:
+        raise ValueError(f"swap_plan needs >= 1 page, got {n_pages}")
+    page_bytes = page_tokens * n_kv_heads * head_dim * elem
+    np_dt = _NP_FOR_ELEM[elem]
+    kind = EventKind.DMA_OUT if direction == "out" else EventKind.DMA_IN
+    events: list = []
+    tensors: dict = {}
+    eid = 0
+    for i in range(n_layers):
+        P = f"L{i}." if n_layers > 1 else ""
+        for pool in (P + k, P + v):
+            ns = pool + ".swap"
+            tensors[ns] = TensorSpec(n_pages * page_tokens,
+                                     n_kv_heads * head_dim, {"P"},
+                                     "intermediate", pages=n_pages)
+            for j in range(n_pages):
+                events.append(Event(
+                    eid, kind, nbytes=page_bytes, page=(ns, (tag, j)),
+                    lane=SWAP_LANE, op=f"swap_{direction}"))
+                eid += 1
+    if name is None:
+        name = f"swap_{direction}.u{tag}"
+    return StreamPlan(name, np_dt, page_bytes, events, tensors,
+                      n_calls=1)

@@ -1159,7 +1159,7 @@ def sampling_error(sc: Scenario, *,
 LOAD_SHAPE = dict(arch="qwen2_0_5b", slots=4, max_seq=96,
                   prompt_lo=8, prompt_hi=24, max_new_tokens=8,
                   prefill_chunk_tokens=16, kv_page_tokens=8,
-                  prefix_tokens=0, seed=0)
+                  prefix_tokens=0, seed=0, kv_pool_pages=None)
 
 
 @dataclasses.dataclass
@@ -1172,6 +1172,7 @@ class LoadPoint:
     n_finished: int
     n_records: int
     n_events: int
+    drained: bool = True           # False: hit max_steps with work left
 
     @property
     def goodput_qps(self) -> float:
@@ -1183,7 +1184,8 @@ class LoadPoint:
                 "goodput_qps": self.goodput_qps,
                 "n_finished": self.n_finished,
                 "n_records": self.n_records,
-                "n_events": self.n_events, **self.percentiles}
+                "n_events": self.n_events,
+                "drained": self.drained, **self.percentiles}
 
 
 @dataclasses.dataclass
@@ -1201,6 +1203,8 @@ class LoadSweepResult:
     calibration: dict              # est_step_s / est_prefill_s_per_token
     prefix_delta: Optional[dict] = None   # mode -> on/off tails
     wall_s: float = 0.0
+    preempt: str = "none"          # preemption policy the sweep ran with
+    kv_pool_pages: Optional[int] = None   # actual pool cap (None: full)
 
     SCHEMA = "loadsweep/v1"
 
@@ -1216,6 +1220,8 @@ class LoadSweepResult:
                 "calibration": self.calibration,
                 "prefix_delta": self.prefix_delta,
                 "wall_s": round(self.wall_s, 3),
+                "preempt": self.preempt,
+                "kv_pool_pages": self.kv_pool_pages,
                 "points": [pt.to_json() for pt in self.points]}
 
 
@@ -1224,6 +1230,7 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
                prefix_caching: bool = True,
                chunk_events: int = 262_144, knee_factor: float = 3.0,
                max_steps: int = 1_000_000,
+               preempt: str = "none", stall_budget_s: float = 0.0,
                host_s_per_elem: Optional[float] = None,
                **shape) -> LoadSweepResult:
     """Capacity-plan an open-loop serving workload: drive the
@@ -1239,6 +1246,14 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
     With ``prefix_tokens`` set in ``shape``, the main curves run with
     ``prefix_caching`` as given and the opposite setting is measured
     once at the reference (lowest) rate — the on/off delta.
+
+    ``preempt`` ("lifo" | "longest") sweeps the swap-thrash regime:
+    unless ``kv_pool_pages`` is given in ``shape``, the KV pool is
+    capped well below the all-slots worst case so admission stalls
+    past ``stall_budget_s`` trigger preemption + KV swap-to-host, and
+    the grid is extended (bounded doubling) until every mode has at
+    least one priced point STRICTLY past its knee — the curve the
+    report's swap/queue percentiles and preemption counts describe.
 
     The engine's admission clock is calibrated from a small probe
     trace priced on the DC system; reported latencies always come
@@ -1260,10 +1275,25 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
     sys_cfgs = [system_for(Scenario(model="serve", mode=m))
                 for m in modes]
 
+    pool = sh["kv_pool_pages"]
+    if pool is None and preempt != "none":
+        # pressured default: without a cap the full pool never defers
+        # and no preemption can ever fire — cap it at ~60% of the
+        # worst case while guaranteeing any single request still fits
+        pt = sh["kv_page_tokens"]
+        longest = sh["prompt_lo"] if sh["prompt_lo"] >= sh["prompt_hi"] \
+            else sh["prompt_hi"] - 1
+        worst = min(sh["prefix_tokens"] + longest
+                    + sh["max_new_tokens"], sh["max_seq"])
+        worst_pages = -(-worst // pt)
+        pool = sh["prefix_tokens"] // pt + max(
+            worst_pages + 1, int(sh["slots"] * worst_pages * 0.6))
+
     def mk_engine(caching: bool) -> ServingEngine:
         return ServingEngine(
             cfg_model, slots=sh["slots"], max_seq=sh["max_seq"],
             plan_only=True, kv_page_tokens=sh["kv_page_tokens"],
+            kv_pool_pages=pool,
             prefix_tokens=sh["prefix_tokens"], prefix_caching=caching)
 
     def mk_requests(n: int) -> list:
@@ -1303,7 +1333,8 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
     qps = tuple(sorted(float(q) for q in qps))
     open_kw = dict(est_step_s=est_step, est_prefill_s_per_token=est_pf,
                    prefill_chunk_tokens=sh["prefill_chunk_tokens"],
-                   max_steps=max_steps)
+                   max_steps=max_steps, preempt=preempt,
+                   stall_budget_s=stall_budget_s)
 
     def run_point(lam: float, caching: bool):
         """One offered rate, all modes in one streamed replay."""
@@ -1332,7 +1363,8 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
         return [LoadPoint(
             qps=lam, mode=m, percentiles=rep.percentiles(),
             total_s=rep.total_s, n_finished=eng2.n_finished,
-            n_records=counts["records"], n_events=counts["events"])
+            n_records=counts["records"], n_events=counts["events"],
+            drained=eng2.stats.drained)
             for m, rep in zip(modes, (
                 acc.report(m, r, p, live)
                 for m, r, p in zip(modes, results, pers)))]
@@ -1341,14 +1373,30 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
     points: list = []
     for lam in qps:
         points += run_point(lam, caching_main)
-    knee: dict = {}
-    for m in modes:
-        curve = [pt for pt in points if pt.mode == m]
-        base = curve[0].percentiles["ttft_p99_us"]
-        knee[m] = next(
-            (pt.qps for pt in curve
-             if pt.percentiles["ttft_p99_us"] > knee_factor * base),
-            None)
+
+    def compute_knee() -> dict:
+        knee = {}
+        for m in modes:
+            curve = [pt for pt in points if pt.mode == m]
+            base = curve[0].percentiles["ttft_p99_us"]
+            knee[m] = next(
+                (pt.qps for pt in curve
+                 if pt.percentiles["ttft_p99_us"]
+                 > knee_factor * base), None)
+        return knee
+
+    knee = compute_knee()
+    # preemption sweeps must price the thrash regime: keep doubling
+    # the top rate (bounded) until every mode has a grid point
+    # STRICTLY past its knee
+    extensions = 0
+    while preempt != "none" and extensions < 3 and any(
+            knee[m] is None or knee[m] >= qps[-1] for m in modes):
+        lam = round(qps[-1] * 2.0, 3)
+        qps = qps + (lam,)
+        points += run_point(lam, caching_main)
+        knee = compute_knee()
+        extensions += 1
     prefix_delta = None
     if sh["prefix_tokens"] > 0:
         other = run_point(qps[0], not caching_main)
@@ -1370,4 +1418,5 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
                      "est_prefill_s_per_token": est_pf,
                      "capacity_qps_est": cap_qps},
         prefix_delta=prefix_delta,
-        wall_s=time.perf_counter() - t0)
+        wall_s=time.perf_counter() - t0,
+        preempt=preempt, kv_pool_pages=pool)

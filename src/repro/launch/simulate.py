@@ -38,7 +38,11 @@ arrivals at each ``--qps`` grid rate (auto-bracketed around the
 calibrated capacity when omitted), ``--requests`` requests per
 point, every trace priced across the memory modes in one chunked
 streaming replay — printing offered QPS vs TTFT/TPOT p99 per mode
-plus the saturation knee.
+plus the saturation knee.  ``--preempt lifo|longest`` pressure-caps
+the KV pool so admission stalls trigger preemption + KV swap-to-host
+and extends the grid past the knee (the swap-thrash curve);
+``--swap`` adds per-point preemption counts and swap-DMA / queue
+tail columns.
 """
 from __future__ import annotations
 
@@ -134,14 +138,22 @@ def _run_tune(sc: Scenario, n_points) -> int:
 
 def _run_load_sweep(args) -> int:
     """Open-loop load sweep over the memory modes: one line per
-    (offered QPS, mode) plus the saturation knee per mode."""
+    (offered QPS, mode) plus the saturation knee per mode.  With
+    ``--preempt`` the pool is pressure-capped and the grid extended
+    past the knee; ``--swap`` adds the swap-thrash columns."""
     from repro.core.scenario import sweep_load
     res = sweep_load(qps=args.qps, n_requests=args.requests,
                      arrivals=args.arrivals, modes=tuple(args.modes),
-                     prefix_tokens=args.prefix_tokens)
+                     prefix_tokens=args.prefix_tokens,
+                     preempt=args.preempt,
+                     stall_budget_s=args.stall_budget_us * 1e-6)
     cal = res.calibration
+    pool = f", pool={res.kv_pool_pages} pages" \
+        if res.kv_pool_pages is not None else ""
+    pre = f", preempt={res.preempt}{pool}" \
+        if res.preempt != "none" else ""
     print(f"load sweep {res.arch} ({res.arrivals}, "
-          f"{res.n_requests} requests/point): est capacity "
+          f"{res.n_requests} requests/point{pre}): est capacity "
           f"{cal['capacity_qps_est']:,.0f} qps "
           f"(decode step {cal['est_step_s']*1e6:.1f}us); "
           f"wall {res.wall_s:.1f}s")
@@ -150,11 +162,15 @@ def _run_load_sweep(args) -> int:
             p = pt.percentiles
             cens = f" in_flight={p['n_in_flight']}" \
                 if p["n_in_flight"] else ""
+            swap = f" preempt={p['preemptions']:4d} " \
+                   f"swap_p99={p['swap_p99_us']:7.1f}us " \
+                   f"queue_p99={p['queue_p99_us']:9.1f}us" \
+                if args.swap else ""
             print(f"  {mode:7s} qps={pt.qps:10,.1f} "
                   f"ttft_p99={p['ttft_p99_us']:9.1f}us "
                   f"tpot_p99={p['tpot_p99_us']:8.1f}us "
                   f"goodput={pt.goodput_qps:10,.1f}/s "
-                  f"events={pt.n_events:,}{cens}")
+                  f"events={pt.n_events:,}{swap}{cens}")
         k = res.knee_qps[mode]
         print(f"  {mode:7s} saturation knee: " +
               (f"{k:,.1f} qps" if k else "not reached on this grid"))
@@ -223,6 +239,17 @@ def main(argv=None) -> int:
     ap.add_argument("--prefix-tokens", type=int, default=0,
                     help="shared system-prompt tokens for --arrivals "
                          "(reports the prefix-caching on/off delta)")
+    ap.add_argument("--preempt", default="none",
+                    choices=["none", "lifo", "longest"],
+                    help="serve only: preemption policy under memory "
+                         "pressure — caps the KV pool and extends the "
+                         "sweep past the knee (swap-thrash curve)")
+    ap.add_argument("--stall-budget-us", type=float, default=0.0,
+                    help="admission stall tolerated before preempting "
+                         "a victim (default 0: preempt immediately)")
+    ap.add_argument("--swap", action="store_true",
+                    help="serve only: print per-point preemption / "
+                         "swap-DMA / queue-delay tail columns")
     args = ap.parse_args(argv)
     if args.list:
         print("\n".join(scenario_names()))
@@ -259,11 +286,15 @@ def main(argv=None) -> int:
         ap.error(str(e))
     if target.kind == "serve":
         args.dtype = "fp16"        # the engine's KV cache dtype decides
+    if args.arrivals is None and (args.preempt != "none" or args.swap):
+        ap.error("--preempt/--swap require --arrivals (load sweep)")
     if args.arrivals is not None:
         if target.kind != "serve":
             ap.error("--arrivals only applies to --workload serve")
         if args.requests < 1:
             ap.error("--requests must be >= 1")
+        if args.stall_budget_us < 0:
+            ap.error("--stall-budget-us must be >= 0")
         return _run_load_sweep(args)
     sc = Scenario(model=name, dtype=args.dtype, seq=args.seq,
                   n_layers=args.layers,

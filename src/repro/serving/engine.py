@@ -43,8 +43,10 @@ class PlanRecord:
     batched multi-layer decode step, tagged with the engine step index
     and the slot -> request-uid mapping so simulated time folds back
     onto individual requests.  ``uids == (-1,)`` marks the shared
-    prefix-cache prefill, which belongs to no request."""
-    kind: str                       # "prefill" | "decode"
+    prefix-cache prefill, which belongs to no request.  ``swap_out`` /
+    ``swap_in`` records carry a preempted request's KV traffic to and
+    from host (``n_tokens`` = cached tokens at the swap point)."""
+    kind: str             # "prefill" | "decode" | "swap_out" | "swap_in"
     step_idx: int                   # engine decode-step counter
     slots: tuple                    # slot ids this plan covers
     uids: tuple                     # request uid per slot
@@ -103,6 +105,12 @@ class EngineStats:
     prefills: int = 0
     tokens_out: int = 0
     wall_s: float = 0.0
+    preemptions: int = 0
+    swapped_pages: int = 0          # device pages moved host-ward
+    # False when the run hit ``max_steps`` with work still queued or
+    # in flight — a truncated sim must never masquerade as a complete
+    # one (pair with ``unfinished_uids()`` to censor the report)
+    drained: bool = True
 
     @property
     def tokens_per_s(self) -> float:
@@ -171,6 +179,16 @@ class ServingEngine:
         self.sim_t = 0.0            # open-loop simulated clock
         self._sink: Optional[list] = None
         self._prefilling: dict = {}  # slot -> [req, done, total]
+        # ---- preemption / swap state (open-loop path)
+        self._preempt_policy = "none"
+        self._stall_budget_s = 0.0
+        self._debug_invariants = False
+        self._defer_since: Optional[float] = None  # head's wait start
+        self._swapped: dict = {}    # uid -> (n_pages, tokens, remaining,
+        #                             prefill_total | None)
+        self._progress: dict = {}   # slot -> tokens since (re)admission
+        self._admit_seq: dict = {}  # slot -> admission order counter
+        self._admit_counter = 0
         self._prefix_tokens = int(prefix_tokens)
         self._prefix_pages: Optional[np.ndarray] = None
         self._prefix_recorded = False
@@ -356,6 +374,10 @@ class ServingEngine:
             self.step()
             steps += 1
         self.stats.wall_s = time.perf_counter() - t0
+        # hitting max_steps with work left is a TRUNCATED run — flag
+        # it so partial stats can't pass for a drained queue
+        self.stats.drained = not self.queue and \
+            all(r is None for r in self.slot_req)
         return self.stats
 
     # ------------------------------------------ open-loop (plan-only)
@@ -367,27 +389,131 @@ class ServingEngine:
         live += [r.uid for r in self.queue]
         return tuple(live)
 
+    def _pick_victim(self, exclude: Optional[int] = None
+                     ) -> Optional[int]:
+        """Choose a running slot to preempt, or None.  Only slots that
+        have produced at least one token since (re)admission are
+        eligible — preempting zero-progress work can livelock two
+        large requests into evicting each other forever, while
+        requiring progress guarantees every preemption cycle advances
+        someone.  ``lifo``: most recently admitted (vLLM's default —
+        the newest request has the least sunk cost); ``longest``: most
+        own pages held (frees the most memory per eviction)."""
+        cands = [s for s, r in enumerate(self.slot_req)
+                 if r is not None and s != exclude
+                 and self._progress.get(s, 0) > 0]
+        if not cands:
+            return None
+        if self._preempt_policy == "lifo":
+            return max(cands, key=lambda s: self._admit_seq[s])
+        # "longest": frees the most device pages
+        t = self._table
+        return max(cands, key=lambda s: (int(t.held[s])
+                                         - int(t.shared[s]),
+                                         self._admit_seq[s]))
+
+    def _preempt(self, slot: int):
+        """Evict ``slot``: record the page-aligned swap-out of its
+        written KV (``PageTable.swap_out`` frees the device pages),
+        stash its exact progress for resume, and re-queue it directly
+        BEHIND the queue head — the head's admission is the point of
+        the eviction, and the victim resumes right after it."""
+        req = self.slot_req[slot]
+        pf = self._prefilling.pop(slot, None)
+        if pf is not None:
+            tokens, remaining, total = pf[1], -1, pf[2]
+        else:
+            tokens = int(self._lens[slot])
+            remaining, total = int(self._remaining[slot]), None
+        plan, n_swap = self._table.swap_out(
+            slot, tokens, req.uid, n_layers=self.cfg.n_layers)
+        if plan is not None:
+            self._record(PlanRecord(
+                "swap_out", self.stats.decode_steps, (slot,),
+                (req.uid,), plan, arrival_event=req.arrival_event,
+                n_tokens=tokens))
+        self._swapped[req.uid] = (n_swap, tokens, remaining, total)
+        self.slot_req[slot] = None
+        self._lens[slot] = 0
+        self._progress.pop(slot, None)
+        self.stats.preemptions += 1
+        self.stats.swapped_pages += n_swap
+        if self.queue:
+            head = self.queue.popleft()
+            self.queue.appendleft(req)
+            self.queue.appendleft(head)
+        else:
+            self.queue.appendleft(req)
+
+    def _resume_or_start(self, slot: int, req: Request):
+        """Bind ``req`` to ``slot``: allocate its device pages and
+        either enter the chunked-prefill state machine (fresh request,
+        or one preempted mid-prefill — it continues at the chunk
+        boundary it stopped on) or rejoin the decode batch (preempted
+        while decoding), recording the swap-in DMA first."""
+        swap = self._swapped.pop(req.uid, None)
+        full = self._prefix_tokens + len(req.prompt)
+        alloc_tokens = full if swap is None else max(full, swap[1])
+        if not self._table.alloc_seq(slot, alloc_tokens,
+                                     prefix=self._prefix_pages):
+            raise RuntimeError(       # _can_admit guarantees it
+                "shadow KV table out of pages at admission")
+        self.slot_req[slot] = req
+        self._progress[slot] = 0
+        self._admit_seq[slot] = self._admit_counter
+        self._admit_counter += 1
+        if swap is None:
+            done = self._prefix_tokens \
+                if self._prefix_pages is not None else 0
+            self._prefilling[slot] = [req, done, full]
+            return
+        n_swap, tokens, remaining, total = swap
+        if n_swap:
+            self._record(PlanRecord(
+                "swap_in", self.stats.decode_steps, (slot,),
+                (req.uid,),
+                self._table.swap_in_plan(n_swap, req.uid,
+                                         n_layers=self.cfg.n_layers),
+                arrival_event=req.arrival_event, n_tokens=tokens))
+        if total is not None:            # was mid-prefill: continue it
+            self._prefilling[slot] = [req, tokens, total]
+        else:                            # was decoding: rejoin batch
+            self._lens[slot] = tokens
+            if not self._table.note_tokens(slot, tokens):
+                raise RuntimeError(   # alloc_seq covered these pages
+                    "swap-in lost pages the allocation reserved")
+            self._remaining[slot] = remaining
+
     def _admit_open(self):
         """Open-loop admission: same conservative capacity check as
         ``_admit``, but the admitted request enters the chunked-prefill
         state machine instead of being prefilled whole — long prompts
-        cost several engine steps, not one monolithic stall."""
+        cost several engine steps, not one monolithic stall.
+
+        With a preemption policy armed, a head deferred longer than
+        the stall budget evicts victims (``_pick_victim``) until its
+        conservative reservation fits — head-of-line blocking degrades
+        into swap thrash instead of unbounded queueing."""
         for slot in range(self.slots):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
             if not self._can_admit(self.queue[0]):
-                self.deferred_admissions += 1
-                return
+                if self._defer_since is None:
+                    self._defer_since = self.sim_t
+                if self._preempt_policy != "none" and \
+                        self.sim_t - self._defer_since >= \
+                        self._stall_budget_s:
+                    while not self._can_admit(self.queue[0]):
+                        victim = self._pick_victim()
+                        if victim is None:
+                            break
+                        self._preempt(victim)
+                if not self._can_admit(self.queue[0]):
+                    self.deferred_admissions += 1
+                    return
+            self._defer_since = None
             req = self.queue.popleft()
-            full = self._prefix_tokens + len(req.prompt)
-            if not self._table.alloc_seq(slot, full,
-                                         prefix=self._prefix_pages):
-                raise RuntimeError(       # _can_admit guarantees it
-                    "shadow KV table out of pages at admission")
-            self.slot_req[slot] = req
-            done = self._prefix_tokens \
-                if self._prefix_pages is not None else 0
-            self._prefilling[slot] = [req, done, full]
+            self._resume_or_start(slot, req)
 
     def _retire_open(self, slot: int):
         req = self.slot_req[slot]
@@ -395,6 +521,7 @@ class ServingEngine:
         self.slot_req[slot] = None
         self.n_finished += 1
         self._lens[slot] = 0
+        self._progress.pop(slot, None)
         self._table.free_seq(slot)
 
     def _prefill_chunk_open(self, slot: int, chunk: int,
@@ -412,6 +539,7 @@ class ServingEngine:
                 d_ff=self.cfg.d_ff, n_layers=self.cfg.n_layers),
             arrival_event=req.arrival_event, n_tokens=end - done))
         self.stats.prefills += 1
+        self._progress[slot] = self._progress.get(slot, 0) + end - done
         if end == total:
             del self._prefilling[slot]
             self._lens[slot] = total
@@ -449,21 +577,36 @@ class ServingEngine:
             dt += est_step_s
             for slot in active:
                 self._lens[slot] += 1
-                if not self._table.note_tokens(slot,
-                                               int(self._lens[slot])):
-                    raise RuntimeError("shadow KV table out of pages")
+                self._progress[slot] = self._progress.get(slot, 0) + 1
                 self.stats.tokens_out += 1
                 self._remaining[slot] -= 1
+                grew = self._table.note_tokens(slot,
+                                               int(self._lens[slot]))
                 if self._remaining[slot] <= 0 or \
                         int(self._lens[slot]) >= self.max_seq - 1:
                     self._retire_open(slot)
+                elif not grew:
+                    # mid-decode page growth failed — only reachable
+                    # when the pool shrank under us (fault injection
+                    # seizing pages breaks the conservative admission
+                    # reservation).  Degrade gracefully: swap this
+                    # slot out and resume it when pages return,
+                    # instead of crashing the run.
+                    if self._preempt_policy == "none":
+                        raise RuntimeError(
+                            "shadow KV table out of pages")
+                    self._preempt(slot)
         return dt
 
     def open_loop_records(self, requests, arrival_s, *,
                           est_step_s: float = 1e-3,
                           est_prefill_s_per_token: float = 1e-4,
                           prefill_chunk_tokens: int = 64,
-                          max_steps: int = 1_000_000):
+                          max_steps: int = 1_000_000,
+                          preempt: str = "none",
+                          stall_budget_s: float = 0.0,
+                          faults=None,
+                          debug_invariants: bool = False):
         """Generator driving an OPEN-loop run — requests arrive on the
         ``arrival_s`` clock whether or not the engine keeps up (the
         queue grows past saturation) — yielding ``PlanRecord``s as they
@@ -474,12 +617,33 @@ class ServingEngine:
         (calibrate them from a small priced probe trace — reported
         TTFT/TPOT always come from the replay itself).
 
+        ``preempt`` arms graceful degradation under memory pressure:
+        when the queue head has been deferred for more than
+        ``stall_budget_s`` of simulated time, a running victim
+        (``"lifo"``: newest admission; ``"longest"``: most pages) is
+        swapped out to host (priced ``swap_out``/``swap_in`` records)
+        and re-queued behind the head.  ``faults`` is an optional
+        object whose ``on_step(engine, step_idx)`` is called once per
+        iteration (``serving.faults`` injects pool seizures there);
+        ``debug_invariants`` runs the ``serving.invariants`` validator
+        every step and at drain.
+
         Deterministic: same requests + arrivals => identical records.
         Use ``run_open_loop`` to retain the trace instead."""
         if not self.plan_only or self._table is None:
             raise ValueError(
                 "open_loop_records() needs plan_only=True (the jitted "
                 "model path is closed-loop only)")
+        if preempt not in ("none", "lifo", "longest"):
+            raise ValueError(
+                f"unknown preemption policy {preempt!r} — expected "
+                "none, lifo, or longest")
+        if stall_budget_s < 0:
+            raise ValueError(
+                f"stall_budget_s must be >= 0: {stall_budget_s}")
+        self._preempt_policy = preempt
+        self._stall_budget_s = float(stall_budget_s)
+        self._debug_invariants = bool(debug_invariants)
         if prefill_chunk_tokens % self._table.cfg.page_tokens:
             raise ValueError(
                 f"prefill_chunk_tokens={prefill_chunk_tokens} must be "
@@ -518,13 +682,30 @@ class ServingEngine:
                     self.submit(req)
                     req.submitted_s = float(arr[i])
                     i += 1
+                if faults is not None:
+                    faults.on_step(self, steps)
                 self._admit_open()
-                self.sim_t += self._step_open(prefill_chunk_tokens,
-                                              est_step_s,
-                                              est_prefill_s_per_token)
+                dt = self._step_open(prefill_chunk_tokens, est_step_s,
+                                     est_prefill_s_per_token)
+                self.sim_t += dt
+                if dt == 0.0 and self.queue and i < len(reqs) and \
+                        all(r is None for r in self.slot_req):
+                    # fully stalled on admission (nothing running,
+                    # head deferred): open-loop time still passes —
+                    # jump to the next arrival so the queue keeps
+                    # growing instead of the loop spinning in place
+                    self.sim_t = max(self.sim_t, float(arr[i]))
+                if self._debug_invariants:
+                    from repro.serving import invariants
+                    invariants.check_step(self)
                 steps += 1
                 yield from buf
                 buf.clear()
+            self.stats.drained = i >= len(reqs) and not self.queue \
+                and all(r is None for r in self.slot_req)
+            if self._debug_invariants and self.stats.drained:
+                from repro.serving import invariants
+                invariants.check_drained(self)
         finally:
             self._sink = None
 

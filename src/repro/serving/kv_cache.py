@@ -60,6 +60,8 @@ class PageTable:
         self.held = np.zeros((max_seqs,), np.int32)   # pages per slot
         self.shared = np.zeros((max_seqs,), np.int32)  # leading shared
         self.active = np.zeros((max_seqs,), bool)
+        self._prefix: list = []     # ids reserved by reserve_prefix
+        self._seized: list = []     # ids removed by seize_pages (faults)
 
     # --------------------------------------------------- slot lifecycle
     def reserve_prefix(self, n_pages: int) -> np.ndarray:
@@ -72,8 +74,9 @@ class PageTable:
             raise ValueError(
                 f"cannot reserve {n_pages} prefix pages: only "
                 f"{len(self._free)} free")
-        return np.array([self._free.pop() for _ in range(n_pages)],
-                        np.int32)
+        ids = [self._free.pop() for _ in range(n_pages)]
+        self._prefix += ids
+        return np.array(ids, np.int32)
 
     def alloc_seq(self, slot: int, prompt_len: int,
                   prefix: Optional[np.ndarray] = None) -> bool:
@@ -128,6 +131,108 @@ class PageTable:
             return False
         self.lens[slot] = new_len
         return True
+
+    # ------------------------------------------------------------ swap
+    def written_own_pages(self, slot: int, tokens: int) -> int:
+        """Pages of ``slot``'s OWN (non-shared) table that hold written
+        KV for the first ``tokens`` cached tokens — the page-aligned
+        swap set.  Shared prefix pages are never swapped (they outlive
+        every request)."""
+        npg = -(-int(tokens) // self.cfg.page_tokens)
+        return max(0, min(npg, int(self.held[slot]))
+                   - int(self.shared[slot]))
+
+    def swap_out(self, slot: int, tokens: int, tag, *,
+                 n_layers: int = 1):
+        """Preempt ``slot``: emit the page-aligned swap plan (DMA_OUT
+        of every written own K/V page per layer to the host swap region
+        keyed by ``tag``), then release ALL the slot's device pages
+        back to the free list (``free_seq``).  Returns ``(plan,
+        n_swapped_pages)``; ``plan`` is None when the slot has no
+        written own pages (nothing to move — the pages are just
+        freed)."""
+        from repro.core import plan as plan_ir
+        n_swap = self.written_own_pages(slot, tokens)
+        plan = None
+        if n_swap:
+            plan = plan_ir.swap_plan(
+                n_swap, self.cfg.page_tokens, self.cfg.n_kv_heads,
+                self.cfg.head_dim, _np_itemsize(self.cfg.dtype),
+                direction="out", tag=tag, n_layers=n_layers)
+        self.free_seq(slot)
+        return plan, n_swap
+
+    def swap_in_plan(self, n_pages: int, tag, *, n_layers: int = 1):
+        """The resume half of ``swap_out``: DMA_IN of the ``n_pages``
+        K/V pages previously written to ``tag``'s host swap region
+        (same namespace and page keys, so the replay's LLC/TLB models
+        see the round trip).  The caller re-allocates device pages
+        (``alloc_seq``) separately — the restored data may land on
+        different pool page ids."""
+        from repro.core import plan as plan_ir
+        return plan_ir.swap_plan(
+            n_pages, self.cfg.page_tokens, self.cfg.n_kv_heads,
+            self.cfg.head_dim, _np_itemsize(self.cfg.dtype),
+            direction="in", tag=tag, n_layers=n_layers)
+
+    # ------------------------------------------------- fault injection
+    def seize_pages(self, n: int) -> int:
+        """Remove up to ``n`` pages from the free list (a co-tenant
+        grabbing device memory mid-run — the fault-injection pool
+        shrink).  Returns the number actually seized.  Seized pages
+        stay accounted (``validate()`` treats them as their own
+        partition) until ``restore_pages`` returns them."""
+        n = min(int(n), len(self._free))
+        for _ in range(n):
+            self._seized.append(self._free.pop())
+        return n
+
+    def restore_pages(self, n: Optional[int] = None) -> int:
+        """Return ``n`` seized pages (default: all) to the free list."""
+        n = len(self._seized) if n is None else min(int(n),
+                                                    len(self._seized))
+        for _ in range(n):
+            self._free.append(self._seized.pop())
+        return n
+
+    # ------------------------------------------------------ invariants
+    def validate(self) -> None:
+        """Pool-accounting check: the free list, every active slot's
+        own pages, the reserved prefix pages, and the fault-seized
+        pages must PARTITION ``range(n_pages)`` — no double-frees, no
+        leaks, no aliased tables.  Raises ``AssertionError`` with the
+        discrepancy; cheap enough to run every engine step in debug
+        mode (O(pool))."""
+        free = list(self._free)
+        owned: list = []
+        for s in range(self.max_seqs):
+            held, sh = int(self.held[s]), int(self.shared[s])
+            if not self.active[s]:
+                assert held == 0 and sh == 0, \
+                    f"inactive slot {s} still holds {held} pages"
+                continue
+            assert 0 <= sh <= held, (s, sh, held)
+            own = [int(p) for p in self.tables[s, sh:held]]
+            for p in self.tables[s, :sh]:
+                assert int(p) in set(self._prefix), \
+                    f"slot {s} shared page {int(p)} not a prefix page"
+            owned += own
+        parts = {"free": free, "owned": owned, "prefix": self._prefix,
+                 "seized": self._seized}
+        for label, part in parts.items():
+            assert len(part) == len(set(part)), \
+                f"duplicate page ids in {label}: {sorted(part)}"
+        total = sum(len(p) for p in parts.values())
+        union = set().union(*(set(p) for p in parts.values()))
+        assert total == len(union), \
+            "page partitions overlap: " + ", ".join(
+                f"{a}∩{b}={sorted(set(parts[a]) & set(parts[b]))}"
+                for a in parts for b in parts
+                if a < b and set(parts[a]) & set(parts[b]))
+        assert union == set(range(self.cfg.n_pages)), \
+            f"pool leak: {sorted(set(range(self.cfg.n_pages)) - union)}" \
+            f" unaccounted, {sorted(union - set(range(self.cfg.n_pages)))}" \
+            " phantom"
 
     # ------------------------------------------------------- streaming
     def decode_step_plan(self, slots, out: str = "decode_out", *,

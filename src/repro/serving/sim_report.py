@@ -14,7 +14,11 @@ per-record simulated durations to individual requests:
     (the LAST prefill chunk emits the first token) minus its arrival
     time, so queueing/deferral delay is included;
   * simulated TPOT — (last decode-token time - prefill completion) /
-    decoded tokens.
+    decoded tokens;
+  * component split — per request, TTFT decomposes into queue /
+    prefill / swap-stall and the decode phase into decode / swap /
+    stall, with swap DMA (``swap_out``/``swap_in`` preemption
+    records) and preemption counts attributed to their victim.
 
 Edge cases are reported as CENSORED, never dropped silently or left
 to skew the tails: a request still in flight when the trace ends
@@ -40,7 +44,14 @@ from repro.core import plan as plan_ir
 
 @dataclasses.dataclass
 class RequestSim:
-    """Simulated latency of one served request."""
+    """Simulated latency of one served request, split into additive
+    components: ``queue_s + prefill_s + swap_pre_s == ttft_s`` and
+    (for decoded requests) ``decode_s + swap_post_s + stall_s`` spans
+    first token -> last token, so end-to-end latency is exactly the
+    sum of all six.  ``queue_s``/``stall_s`` are the residuals — time
+    the request spent waiting on admission, deferral, or other
+    requests' records; the other four are the request's own priced
+    record durations."""
     uid: int
     ttft_s: float                  # arrival -> first token (nan if the
     #                                prefill never completed)
@@ -48,6 +59,19 @@ class RequestSim:
     #                                censored)
     n_tokens: int                  # tokens attributed (prefill + decode)
     censored: bool = False         # still in flight at trace end
+    queue_s: float = math.nan      # ttft share: waiting / others' turns
+    prefill_s: float = math.nan    # ttft share: own prefill records
+    swap_pre_s: float = math.nan   # ttft share: swap DMA before 1st tok
+    decode_s: float = math.nan     # own decode records
+    stall_s: float = math.nan      # decode-phase waiting on others
+    swap_post_s: float = math.nan  # swap DMA after the first token
+    e2e_s: float = math.nan        # arrival -> last attributed record
+    n_preempt: int = 0             # times this request was evicted
+
+    @property
+    def swap_s(self) -> float:
+        """Total swap DMA time attributed to this request."""
+        return self.swap_pre_s + self.swap_post_s
 
 
 class RecMeta(NamedTuple):
@@ -76,12 +100,23 @@ class ServingSimReport:
         ttft = ttft[~np.isnan(ttft)]
         tpot = np.array([r.tpot_s for r in self.requests])
         tpot = tpot[~np.isnan(tpot)]
+        swap = np.array([r.swap_s for r in self.requests
+                         if not math.isnan(r.swap_s)])
+        queue = np.array([r.queue_s for r in self.requests])
+        queue = queue[~np.isnan(queue)]
         out = {"requests": len(self.requests),
                "n_in_flight": sum(r.censored for r in self.requests),
                "n_prefill_only": sum(
                    1 for r in self.requests
-                   if not r.censored and r.n_tokens <= 1)}
-        for label, arr in (("ttft", ttft), ("tpot", tpot)):
+                   if not r.censored and r.n_tokens <= 1),
+               "n_preempted": sum(r.n_preempt > 0
+                                  for r in self.requests),
+               "preemptions": sum(r.n_preempt for r in self.requests),
+               "swap_s_total": float(sum(
+                   r.swap_s for r in self.requests
+                   if not math.isnan(r.swap_s)))}
+        for label, arr in (("ttft", ttft), ("tpot", tpot),
+                           ("swap", swap), ("queue", queue)):
             for p in (50, 95, 99):
                 out[f"{label}_p{p}_us"] = float(
                     np.percentile(arr, p) * 1e6) if arr.size else \
@@ -106,17 +141,31 @@ def fold_requests(trace: Sequence, per: np.ndarray,
     the trace ended (``ServingEngine.unfinished_uids()``).
 
     Handles chunked prefills (a uid's arrival anchors at its FIRST
-    prefill record, completion at its LAST), skips the shared
+    prefill record, completion at its LAST — preemption may interleave
+    ``swap_out``/``swap_in`` records between chunks), skips the shared
     prefix-cache record (``uid < 0`` — its duration stays on the
     timeline but belongs to no request), and censors in-flight
     requests: truncated decodes contribute no TPOT, and an in-flight
     request with no decode steps is conservatively treated as still
-    prefilling (``ttft_s = nan``)."""
+    prefilling (``ttft_s = nan``).
+
+    Swap DMA records are attributed to their request and the latency
+    split into additive components: before the first token,
+    ``ttft = queue_s + prefill_s + swap_pre_s``; after it,
+    ``last_tok - first_tok = decode_s + swap_post_s + stall_s``.
+    ``queue_s``/``stall_s`` are residuals (time the request existed
+    but its own records weren't running); both identities hold
+    exactly and ``e2e_s`` is their sum."""
     cum = np.cumsum(per)
     arrival: dict = {}
     prefill_done: dict = {}
+    prefill_last_i: dict = {}
+    prefill_s: dict = {}
     last_tok: dict = {}
     n_decode: dict = {}
+    decode_s: dict = {}
+    swaps: dict = {}               # uid -> [(rec index, duration)]
+    n_preempt: dict = {}
     order: list = []
     for i, rec in enumerate(trace):
         if rec.kind == "prefill":
@@ -128,22 +177,56 @@ def fold_requests(trace: Sequence, per: np.ndarray,
                 ae = rec.arrival_event
                 arrival[uid] = float(cum[ae - 1]) if ae > 0 else 0.0
             prefill_done[uid] = float(cum[i])
-        else:
+            prefill_last_i[uid] = i
+            prefill_s[uid] = prefill_s.get(uid, 0.0) + float(per[i])
+        elif rec.kind in ("swap_out", "swap_in"):
+            uid = rec.uids[0]
+            # a request can be evicted before its first prefill chunk
+            # ever ran? no — victims always have progress, so arrival
+            # is already anchored; still, guard the fold
+            if uid not in arrival:
+                order.append(uid)
+                ae = rec.arrival_event
+                arrival[uid] = float(cum[ae - 1]) if ae > 0 else 0.0
+            swaps.setdefault(uid, []).append((i, float(per[i])))
+            if rec.kind == "swap_out":
+                n_preempt[uid] = n_preempt.get(uid, 0) + 1
+            last_tok[uid] = float(cum[i])
+        else:                      # decode
             for uid in rec.uids:
                 last_tok[uid] = float(cum[i])
                 n_decode[uid] = n_decode.get(uid, 0) + 1
+                decode_s[uid] = decode_s.get(uid, 0.0) + float(per[i])
     live = set(in_flight)
     requests = []
     for uid in order:
         nd = n_decode.get(uid, 0)
         cens = uid in live
-        tpot = (last_tok[uid] - prefill_done[uid]) / nd \
-            if nd and not cens else math.nan
-        ttft = math.nan if cens and nd == 0 else \
-            prefill_done[uid] - arrival[uid]
-        requests.append(RequestSim(
+        done = prefill_done.get(uid)
+        tpot = (last_tok[uid] - done) / nd \
+            if nd and not cens and done is not None else math.nan
+        ttft = math.nan if done is None or (cens and nd == 0) else \
+            done - arrival[uid]
+        sim = RequestSim(
             uid=uid, ttft_s=ttft, tpot_s=tpot, n_tokens=1 + nd,
-            censored=cens))
+            censored=cens, n_preempt=n_preempt.get(uid, 0))
+        if not math.isnan(ttft):
+            pf_i = prefill_last_i[uid]
+            sim.prefill_s = prefill_s[uid]
+            sim.swap_pre_s = sum(d for i, d in swaps.get(uid, ())
+                                 if i < pf_i)
+            sim.queue_s = ttft - sim.prefill_s - sim.swap_pre_s
+            if nd and not cens:
+                sim.decode_s = decode_s[uid]
+                sim.swap_post_s = sum(d for i, d in swaps.get(uid, ())
+                                      if i > pf_i)
+                span = last_tok[uid] - done
+                sim.stall_s = span - sim.decode_s - sim.swap_post_s
+                sim.e2e_s = last_tok[uid] - arrival[uid]
+            elif not cens:         # prefill-only: no decode phase
+                sim.decode_s = sim.swap_post_s = sim.stall_s = 0.0
+                sim.e2e_s = ttft
+        requests.append(sim)
     return requests
 
 

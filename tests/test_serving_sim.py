@@ -329,6 +329,7 @@ def test_engine_defers_admission_when_pool_full_then_readmits(
     assert not eng.queue
     # page reuse across re-admissions: never more than 2 pages live
     assert eng._table.pages_in_use == 0
+    eng._table.validate()              # partitions intact post-drain
     prefills = [r for r in eng.trace if r.kind == "prefill"]
     assert len(prefills) == len(reqs)
     free_eng, free_reqs = _run_recorded(cfg, params, slots=4,
@@ -358,6 +359,7 @@ def test_conservative_admission_survives_decode_growth(
     assert all(len(r.output) == r.max_new_tokens for r in reqs)
     assert eng.deferred_admissions > 0
     assert eng._table.pages_in_use == 0
+    eng._table.validate()
 
 
 def test_never_fitting_request_raises_instead_of_livelocking(
@@ -390,6 +392,7 @@ def test_page_table_growth_across_boundaries_and_exhaustion_no_leak():
     pt.free_seq(0)
     assert pt.pages_in_use == 1
     assert pt.note_tokens(1, 9) and pt.held[1] == 2   # drain -> regrow
+    pt.validate()                      # free/owned partition the pool
 
 
 def test_recorded_decode_plan_never_references_freed_pages():
@@ -413,3 +416,4 @@ def test_recorded_decode_plan_never_references_freed_pages():
     touched2 = {e.page[1] for e in plan2.events
                 if e.kind is P.EventKind.DMA_IN}
     assert reused <= touched2
+    pt.validate()
