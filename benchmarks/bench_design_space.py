@@ -66,6 +66,14 @@ def main():
                         buffer_kb=(20, 72), tlb_entries=(16, 64),
                         llc_kb=(2048,), mode=("DM", "DC", "DevMem"))
     res = tune(Scenario(model="bert-base"), space)
+    # parallel group pricing: same search fanned over 2 workers — the
+    # per-(dtype, page_bytes) groups price in their own processes and
+    # every scored point must match the serial run bitwise
+    res_par = tune(Scenario(model="bert-base"), space, workers=2)
+    tune_parity = max(_max_rel_err(a.result, b.result)
+                      for a, b in zip(res.points, res_par.points))
+    assert tune_parity == 0.0, \
+        f"tune(workers=2) diverged from workers=1: {tune_parity}"
 
     report = {
         "workload": "bert-base.exact",
@@ -86,6 +94,8 @@ def main():
             "n_points": len(res.points),
             "wall_s": round(res.wall_s, 4),
             "configs_per_s": round(res.configs_per_s, 1),
+            "workers2_wall_s": round(res_par.wall_s, 4),
+            "workers2_parity": tune_parity == 0.0,
             "best": res.best.to_json(),
             "pareto_size": len(res.pareto),
         },

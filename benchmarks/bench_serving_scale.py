@@ -16,14 +16,30 @@ run would record) and prices them for all three memory modes in ONE
   * ``serve_preempt_1k`` — the 1k workload on a pressure-capped KV
     pool with ``preempt="lifo"``: admission stalls evict victims and
     the trace carries their swap-out/swap-in DMA, pricing the
-    swap-thrash regime end to end.
+    swap-thrash regime end to end;
+  * ``serve_10k_templated`` — the 10k workload with template-compiled
+    plan instancing (``ServingEngine(templated=True)``): structurally
+    identical decode/prefill/swap steps share ONE compiled skeleton
+    and per-step records are cheap page-id relabels.  The row must be
+    bitwise identical to ``serve_10k`` (``GemmResult ==``) and its
+    end-to-end (build + price) wall-clock is the headline speedup;
+  * ``load_sweep_200`` — a 3-rate ``sweep_load`` priced three ways
+    (event-built serial, templated serial, templated parallel
+    workers) with byte-identical ``loadsweep/v1`` JSON across all
+    three.
+
+Per workload, wall-clock is split into phases: ``gen_s`` (trace
+build: engine record walk), ``compile_s`` (chunk compilation share),
+``price_only_s`` (the replay engine's own share).
 
 Writes the usual CSV rows plus ``BENCH_serving_scale.json`` at the
-repo root (schema ``serving_scale/v1``) — events/sec and wall-clock
+repo root (schema ``serving_scale/v2``) — events/sec and wall-clock
 per workload, consumed by ``check_replay_trajectory.py`` as a
-host-normalized >2x regression gate on the streaming path.
+host-normalized >2x regression gate on the streaming path and an
+artifact-level (same-host ratio) gate on the templating speedup.
 """
 import json
+import os
 import resource
 import time
 import tracemalloc
@@ -34,8 +50,10 @@ import numpy as np
 from repro.accesys.pipeline import (release_scratch, replay_trace,
                                     replay_trace_streamed)
 from repro.configs import get_reduced
-from repro.core.plan import trace_footprint
-from repro.core.scenario import MODES, Scenario, system_for
+from repro.core.plan import (_plan_n_events, compile_trace_chunks,
+                             trace_footprint)
+from repro.core.scenario import (MODES, Scenario, sweep_load,
+                                 system_for)
 from repro.serving.engine import Request, ServingEngine, arrival_times
 
 try:
@@ -88,9 +106,12 @@ def record_stream(n: int, seed: int = SEED, run_kw=None, **engine_kw):
 
 
 def stream_price(n: int, cfgs, run_kw=None, **engine_kw):
-    """Two-pass O(chunk) pricing of the n-request trace: pass 1 walks
-    the record stream for the footprint + counts, pass 2 streams the
-    plans straight into the chunked replayer."""
+    """Three-phase O(chunk) pricing of the n-request trace: pass 1
+    walks the record stream for the footprint + counts (trace build),
+    pass 2 times chunk compilation over a fresh stream, pass 3 streams
+    the plans straight into the chunked replayer.  Each pass
+    regenerates the trace, so compile and price shares are the
+    differences between the passes."""
     counts = {"records": 0, "events": 0}
     engines = []
 
@@ -99,7 +120,7 @@ def stream_price(n: int, cfgs, run_kw=None, **engine_kw):
         engines.append(eng)
         for rec in gen:
             counts["records"] += 1
-            counts["events"] += len(rec.plan.events)
+            counts["events"] += _plan_n_events(rec.plan)
             yield rec.plan
 
     t0 = time.perf_counter()
@@ -113,11 +134,19 @@ def stream_price(n: int, cfgs, run_kw=None, **engine_kw):
         return (rec.plan for rec in gen)
 
     t0 = time.perf_counter()
+    for _ in compile_trace_chunks(factory(), chunk_events=CHUNK_EVENTS):
+        pass
+    compile_pass_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
     results, _ = replay_trace_streamed(cfgs, factory,
                                        footprint_pages=foot,
                                        chunk_events=CHUNK_EVENTS)
     price_s = time.perf_counter() - t0
-    return results, foot, counts, gen_s, price_s
+    phases = {"compile_s": round(max(compile_pass_s - gen_s, 0.0), 3),
+              "price_only_s": round(max(price_s - compile_pass_s, 0.0),
+                                    3)}
+    return results, foot, counts, gen_s, price_s, phases
 
 
 def peak_mb(fn):
@@ -130,18 +159,25 @@ def peak_mb(fn):
 
 def main():
     rows = []
-    report = {"schema": "serving_scale/v1", "chunk_events": CHUNK_EVENTS,
+    report = {"schema": "serving_scale/v2", "chunk_events": CHUNK_EVENTS,
               "qps": QPS, "engine": ENGINE_KW, "workloads": {}}
     cfgs = [system_for(Scenario(model="serve", mode=m)) for m in MODES]
 
+    # baseline rows rebuild every plan as a fresh event graph
+    # (templated=False); the *_templated row is the same trace as
+    # template instances — GemmResults must match bitwise
     workloads = (
-        ("serve_1k", 1_000, None, {}),
-        ("serve_10k", 10_000, None, {}),
-        ("serve_preempt_1k", 1_000, PREEMPT_RUN_KW, PREEMPT_ENGINE_KW),
+        ("serve_1k", 1_000, None, dict(templated=False)),
+        ("serve_10k", 10_000, None, dict(templated=False)),
+        ("serve_10k_templated", 10_000, None, dict(templated=True)),
+        ("serve_preempt_1k", 1_000, PREEMPT_RUN_KW,
+         dict(templated=False, **PREEMPT_ENGINE_KW)),
     )
+    results_by_name = {}
     for name, n, run_kw, engine_kw in workloads:
-        results, foot, counts, gen_s, price_s = stream_price(
+        results, foot, counts, gen_s, price_s, phases = stream_price(
             n, cfgs, run_kw=run_kw, **engine_kw)
+        results_by_name[name] = results
         ev = counts["events"]
         # the factory regenerates the plan stream inside the priced
         # pass; pass 1 measured that generation cost alone, so the
@@ -150,7 +186,8 @@ def main():
         evs = len(MODES) * ev / replay_s
         wl = {"requests": n, "records": counts["records"],
               "events": ev, "footprint_pages": foot,
-              "gen_s": round(gen_s, 3),
+              "templated": engine_kw.get("templated", False),
+              "gen_s": round(gen_s, 3), **phases,
               "price_s_all_modes": round(price_s, 3),
               "replay_s_all_modes": round(replay_s, 3),
               "per_mode_s": round(replay_s / len(MODES), 3),
@@ -169,6 +206,20 @@ def main():
                         if run_kw else "")))
         report["workloads"][name] = wl
         release_scratch()
+
+    # templating acceptance: bitwise-identical pricing, >=5x e2e
+    assert results_by_name["serve_10k_templated"] == \
+        results_by_name["serve_10k"], \
+        "templated serve_10k GemmResults diverged from event-built"
+    wl10 = report["workloads"]["serve_10k"]
+    wl10t = report["workloads"]["serve_10k_templated"]
+    e2e = wl10["gen_s"] + wl10["price_s_all_modes"]
+    e2e_t = wl10t["gen_s"] + wl10t["price_s_all_modes"]
+    wl10t["bitwise_match"] = True
+    wl10t["speedup_end_to_end"] = round(e2e / max(e2e_t, 1e-9), 2)
+    rows.append(("serve_10k_templated.e2e", round(e2e_t * 1e6, 1),
+                 f"speedup={wl10t['speedup_end_to_end']}x;"
+                 f"bitwise_match=1"))
 
     # O(chunk) memory evidence on the 1k trace: peak tracemalloc of
     # the chunked replayer vs the monolithic one on the SAME plans
@@ -202,7 +253,7 @@ def main():
         res, _ = replay_trace_streamed(cfg, plans,
                                        chunk_events=CHUNK_EVENTS)
         pfx[label] = {"records": len(plans),
-                      "events": sum(len(p.events) for p in plans),
+                      "events": sum(_plan_n_events(p) for p in plans),
                       "total_s": res.total_s}
         release_scratch()
     report["workloads"]["serve_1k"]["prefix_32tok"] = pfx
@@ -211,6 +262,42 @@ def main():
                         - pfx["on"]["total_s"]) * 1e6, 1),
                  f"ev_off={pfx['off']['events']};"
                  f"ev_on={pfx['on']['events']}"))
+
+    # parallel load sweep: the same 3-rate sweep priced event-built
+    # serial, templated serial, templated parallel — byte-identical
+    # loadsweep/v1 JSON across all three, wall-clock is the speedup
+    sweep_kw = dict(qps=(100.0, 300.0, 900.0), n_requests=200)
+    n_workers = min(4, os.cpu_count() or 1)
+    sweeps = {}
+    for label, kw in (("event_serial", dict(templated=False)),
+                      ("templated_serial", {}),
+                      ("templated_workers",
+                       dict(workers=n_workers))):
+        res = sweep_load(**sweep_kw, **kw)
+        j = res.to_json()
+        j.pop("wall_s")
+        sweeps[label] = {"wall_s": round(res.wall_s, 3), "json": j}
+        release_scratch()
+    assert sweeps["templated_serial"]["json"] == \
+        sweeps["event_serial"]["json"], "templated sweep diverged"
+    assert sweeps["templated_workers"]["json"] == \
+        sweeps["event_serial"]["json"], "parallel sweep diverged"
+    sl_e, sl_t, sl_w = (sweeps[k]["wall_s"] for k in
+                        ("event_serial", "templated_serial",
+                         "templated_workers"))
+    report["workloads"]["load_sweep_200"] = {
+        "qps": list(sweep_kw["qps"]),
+        "n_requests": sweep_kw["n_requests"],
+        "workers": n_workers,
+        "event_serial_s": sl_e,
+        "templated_serial_s": sl_t,
+        "templated_workers_s": sl_w,
+        "speedup_templating": round(sl_e / max(sl_t, 1e-9), 2),
+        "speedup_end_to_end": round(sl_e / max(sl_w, 1e-9), 2),
+        "json_identical": True}
+    rows.append(("load_sweep_200.parallel", round(sl_w * 1e6, 1),
+                 f"event_serial_s={sl_e};workers={n_workers};"
+                 f"speedup={sl_e / max(sl_w, 1e-9):.2f}x"))
 
     report["rss_peak_mb"] = round(
         resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1)

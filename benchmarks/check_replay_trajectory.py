@@ -139,19 +139,23 @@ def main(argv=None) -> int:
         # against the committed BENCH_serving_scale.json
         from repro.accesys.pipeline import (release_scratch,
                                             replay_trace_streamed)
+        from repro.core.plan import _plan_n_events
         try:
             from benchmarks.bench_serving_scale import (CHUNK_EVENTS,
-                                                        record_stream)
+                                                        record_stream,
+                                                        stream_price)
         except ImportError:                # run as a bare script
-            from bench_serving_scale import CHUNK_EVENTS, record_stream
+            from bench_serving_scale import (CHUNK_EVENTS,
+                                             record_stream,
+                                             stream_price)
 
         sv = json.loads(SERVE_ARTIFACT.read_text())
         wl = sv["workloads"]["serve_1k"]
         cfgs = [system_for(Scenario(model="serve", mode=m))
                 for m in MODES]
-        _, gen = record_stream(wl["requests"])
+        _, gen = record_stream(wl["requests"], templated=False)
         plans = [rec.plan for rec in gen]
-        n_ev = sum(len(p.events) for p in plans)
+        n_ev = sum(_plan_n_events(p) for p in plans)
         if n_ev != wl["events"]:
             print(f"note: serve_1k trace now holds {n_ev} events "
                   f"(artifact: {wl['events']}) — engine changed; "
@@ -192,13 +196,14 @@ def main(argv=None) -> int:
                                                  PREEMPT_RUN_KW)
             eng, gen = record_stream(pwl["requests"],
                                      run_kw=PREEMPT_RUN_KW,
+                                     templated=False,
                                      **PREEMPT_ENGINE_KW)
             plans = [rec.plan for rec in gen]
             if eng.stats.preemptions != pwl["preemptions"]:
                 print(f"note: preempt trace now has "
                       f"{eng.stats.preemptions} preemptions (artifact:"
                       f" {pwl['preemptions']}) — engine changed")
-            n_ev = sum(len(p.events) for p in plans)
+            n_ev = sum(_plan_n_events(p) for p in plans)
             pswall = float("inf")
             for _ in range(2):
                 release_scratch()
@@ -223,6 +228,48 @@ def main(argv=None) -> int:
                       "BENCH_serving_scale.json")
                 return 1
             print("OK: preemption serving replay within threshold")
+
+        twl = sv["workloads"].get("serve_10k_templated")
+        if twl is not None:
+            # template-instanced path: artifact-level same-host ratios
+            # first (deterministic in CI — both sides of each ratio
+            # were measured on the benchmark host)...
+            if not twl.get("bitwise_match"):
+                print("FAIL: artifact's templated row is not bitwise-"
+                      "matched against the event-built serve_10k")
+                return 1
+            if twl["speedup_end_to_end"] < 5.0:
+                print("FAIL: templated serve_10k end-to-end speedup "
+                      f"{twl['speedup_end_to_end']}x < 5x acceptance")
+                return 1
+            ls = sv["workloads"].get("load_sweep_200")
+            if ls is not None and ls["speedup_end_to_end"] < 3.0:
+                print("FAIL: parallel load-sweep speedup "
+                      f"{ls['speedup_end_to_end']}x < 3x acceptance")
+                return 1
+            # ...then a host-normalized >=2x guard on the row itself:
+            # rebuild + price a templated 1k trace end to end (the 10k
+            # row at 1/10 scale — events/sec is scale-free here) and
+            # compare against the artifact row's end-to-end rate
+            _, _, tcounts, tgen_s, tprice_s, _ = stream_price(
+                1_000, cfgs, templated=True)
+            release_scratch()
+            got_tevs = 3 * tcounts["events"] / (tgen_s + tprice_s)
+            art_tevs = 3 * twl["events"] / (twl["gen_s"]
+                                            + twl["price_s_all_modes"])
+            expect_tevs = art_tevs / host_factor
+            tratio = expect_tevs / max(got_tevs, 1e-9)
+            print(f"templated serving build+price: "
+                  f"{tcounts['events']} events in "
+                  f"{tgen_s + tprice_s:.3f}s -> {got_tevs:,.0f} ev/s "
+                  f"(artifact {art_tevs:,.0f} ev/s, host factor "
+                  f"{host_factor:.2f}x -> expected {expect_tevs:,.0f} "
+                  f"ev/s, slowdown {tratio:.2f}x, threshold 2.0x)")
+            if tratio > 2.0:
+                print("FAIL: templated serving build+price regressed "
+                      ">2x vs BENCH_serving_scale.json")
+                return 1
+            print("OK: templated serving build+price within threshold")
     return 0
 
 

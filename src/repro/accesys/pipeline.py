@@ -19,6 +19,7 @@ functionally.
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import OrderedDict
 from typing import Optional
 
@@ -1391,6 +1392,12 @@ def _segment_bundle(cp):
 
 _SCRATCH_POOL: dict = {}
 _SCRATCH_CAP_BYTES = 512 << 20      # pool size that triggers a purge
+
+if hasattr(os, "register_at_fork"):
+    # sweep workers fork mid-sweep: the child must start with an empty
+    # per-process pool instead of aliasing (copy-on-write) the parent's
+    # peak scratch — its own release_scratch() then frees its own pages
+    os.register_at_fork(after_in_child=_SCRATCH_POOL.clear)
 
 
 def release_scratch() -> int:

@@ -33,6 +33,7 @@ twelve layers' worth.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
 import functools
@@ -228,6 +229,28 @@ class CompiledPlan:
     def n_ops(self) -> int:
         return int(self.op_kind.size)
 
+    def relabel(self, page_map: dict) -> "CompiledPlan":
+        """Cheap page-id relabel: a new ``CompiledPlan`` for the same
+        event structure under renamed page keys (``page_map`` maps old
+        key -> new key, identity for unmapped keys).  Every
+        page-id-independent array (byte counts, lanes, op kinds,
+        drain-group boundaries, segment marks) and every
+        page-id-independent ``memo`` entry is shared BY REFERENCE;
+        only the interned-id column is re-derived — and when the
+        relabel is injective (the usual case: distinct physical pages)
+        even ``trace_ids`` is shared, making an instance O(pages
+        touched), not O(events).  Keys that collapse (e.g. shared
+        prefix pages mapped into several slots) re-intern in
+        first-access order, exactly as compiling the relabeled events
+        would."""
+        keys = [page_map.get(key, key) for key in self.page_keys]
+        intern: dict = {}
+        out_keys: list = []
+        ids = _reintern_skeleton(self, keys, intern, out_keys)
+        return dataclasses.replace(
+            self, page_keys=out_keys, trace_ids=ids,
+            memo=_geometry_memo(self.memo))
+
 
 def _compile_events(streams: Sequence[list], intern: dict = None,
                     page_keys: list = None) -> CompiledPlan:
@@ -321,13 +344,138 @@ def _compile_events(streams: Sequence[list], intern: dict = None,
         seg_trace=np.asarray(seg_trace, np.int64))
 
 
+# --------------------------------------------------- plan templating
+# ``CompiledPlan.memo`` entries derived ONLY from event structure (op
+# kinds, DMA lanes, drain-group and segment boundaries) — safe to share
+# by reference between a template skeleton and every relabeled
+# instance.  Everything else ("prev"/"sd" stack distances, "mru"
+# orders, ("l2", te) subset analyses, ...) is derived from the interned
+# page-id column and must be recomputed per instance.
+_GEOMETRY_MEMO_KEYS = ("gs", "npend", "hasp", "inout_pos", "lanes",
+                       "lane_masks", "lane_pack", "out_ops", "segb")
+
+
+def _geometry_memo(memo: dict) -> dict:
+    return {k: memo[k] for k in _GEOMETRY_MEMO_KEYS if k in memo}
+
+
+def _reintern_skeleton(sk: "CompiledPlan", keys: list, intern: dict,
+                       page_keys: list) -> np.ndarray:
+    """Re-derive a skeleton's interned-id column under relabeled page
+    keys (``keys`` index-aligned with ``sk.page_keys``), interning into
+    the caller's namespace — the shared chunk namespace during trace
+    assembly, or a fresh one for a standalone instance compile.
+    Returns the global ``trace_ids`` column; when the namespace started
+    empty and no keys collapse, the skeleton's own column is shared by
+    reference (the relabel is then pure bookkeeping)."""
+    base = len(page_keys)
+    l2g = np.empty(len(keys), np.int32)
+    for i, key in enumerate(keys):
+        pid = intern.get(key)
+        if pid is None:
+            pid = intern[key] = len(page_keys)
+            page_keys.append(key)
+        l2g[i] = pid
+    if base == 0 and len(page_keys) == len(keys):
+        return sk.trace_ids            # identity relabel: 0..n-1 again
+    return l2g[sk.trace_ids]
+
+
+def _plan_n_events(p) -> int:
+    n = getattr(p, "n_events", None)
+    return len(p.events) if n is None else int(n)
+
+
+def _compiled_part(p, intern: dict, page_keys: list) -> tuple:
+    """One plan's compiled columns with globally interned page ids —
+    spliced from the template skeleton when the plan is a
+    ``TemplatedPlan`` (no event graph is materialized), compiled from
+    the event list otherwise."""
+    sk = getattr(p, "skeleton", None)
+    if sk is not None:
+        ids = _reintern_skeleton(sk, p.inst_keys, intern, page_keys)
+        return (ids, sk.trace_nbytes, sk.trace_is_out, sk.in_lane,
+                sk.op_kind, sk.op_val, sk.grp_end, sk.n_lanes,
+                sk.seg_op, sk.seg_trace, sk.n_events)
+    c = _compile_events([p.events], intern, page_keys)
+    return (c.trace_ids, c.trace_nbytes, c.trace_is_out, c.in_lane,
+            c.op_kind, c.op_val, c.grp_end, c.n_lanes, c.seg_op,
+            c.seg_trace, c.n_events)
+
+
+def _concat_parts(parts: list, page_keys: list) -> CompiledPlan:
+    """Concatenate per-plan compiled columns (page ids already global)
+    into one ``CompiledPlan`` — ``grp_end`` shifts by the DMA_INs of
+    the preceding plans, ``seg_op``/``seg_trace`` by their op/access
+    counts, reproducing ``_compile_events`` over the same plans' event
+    lists bit for bit (every value is the same int/float in the same
+    position; only the walk that produced it differs)."""
+    t_ids: list = []
+    t_nb: list = []
+    t_out: list = []
+    lanes: list = []
+    opk: list = []
+    opv: list = []
+    gend: list = []
+    nl: list = []
+    sop: list = []
+    strc: list = []
+    in_off = op_off = tr_off = 0
+    n_events = 0
+    for (ids, nb, out, lane, kind, val, ge, nlanes, so, st, nev) \
+            in parts:
+        t_ids.append(ids)
+        t_nb.append(nb)
+        t_out.append(out)
+        lanes.append(lane)
+        opk.append(kind)
+        opv.append(val)
+        gend.append(ge + in_off if in_off else ge)
+        nl.append(nlanes)
+        sop.append(so + op_off if op_off else so)
+        strc.append(st + tr_off if tr_off else st)
+        in_off += lane.size
+        op_off += kind.size
+        tr_off += ids.size
+        n_events += nev
+    cat = (lambda xs: xs[0]) if len(parts) == 1 else np.concatenate
+    return CompiledPlan(
+        n_events=n_events, page_keys=page_keys,
+        trace_ids=cat(t_ids), trace_nbytes=cat(t_nb),
+        trace_is_out=cat(t_out), in_lane=cat(lanes),
+        op_kind=cat(opk), op_val=cat(opv), grp_end=cat(gend),
+        n_lanes=cat(nl), seg_op=cat(sop), seg_trace=cat(strc))
+
+
+def _compile_plans(plans: Sequence, intern: dict = None,
+                   page_keys: list = None) -> CompiledPlan:
+    """Compile a batch of plans into one ``CompiledPlan``, splicing
+    templated instances from their skeletons and walking raw plans'
+    events — bitwise-identical to ``_compile_events`` over everyone's
+    event lists."""
+    if intern is None:
+        intern = {}
+        page_keys = []
+    if not any(getattr(p, "skeleton", None) is not None for p in plans):
+        return _compile_events([p.events for p in plans], intern,
+                               page_keys)
+    return _concat_parts([_compiled_part(p, intern, page_keys)
+                          for p in plans], page_keys)
+
+
 def trace_footprint(plans) -> int:
     """Distinct page keys a sequence of plans touches — the global
     address-space footprint the SMMU walk model needs before a chunked
     replay can price its first chunk.  Accepts any iterable of
-    ``StreamPlan``s (a generator is consumed)."""
+    ``StreamPlan``s or ``TemplatedPlan``s (a generator is consumed);
+    templated instances contribute their relabeled key slots directly,
+    without materializing events."""
     seen: set = set()
     for p in plans:
+        keys = getattr(p, "inst_keys", None)
+        if keys is not None:
+            seen.update(keys)
+            continue
         for ev in p.events:
             if ev.kind is not EventKind.COMPUTE:
                 seen.add(ev.page)
@@ -340,11 +488,14 @@ def compile_trace_chunks(plans, chunk_events: int = 262_144):
 
     Yields ``(compiled_chunk, plan_batch)`` pairs.  All chunks share
     ONE page-id namespace (the same ``intern``/``page_keys`` objects
-    thread through every ``_compile_events`` call), so cross-chunk and
-    cross-request page reuse — the prefix-caching / KV-pool-recycling
-    signal — survives chunking; only the compiled arrays themselves are
+    thread through every compile), so cross-chunk and cross-request
+    page reuse — the prefix-caching / KV-pool-recycling signal —
+    survives chunking; only the compiled arrays themselves are
     chunk-sized.  ``plans`` may be a generator: at most one chunk of
-    plans is held at a time."""
+    plans is held at a time.  ``TemplatedPlan`` instances are spliced
+    from their compiled skeletons (an array concatenation plus a
+    per-unique-page re-intern), so a fully templated trace compiles in
+    O(unique structure) instead of O(events)."""
     if chunk_events < 1:
         raise ValueError(f"chunk_events must be >= 1: {chunk_events}")
     intern: dict = {}
@@ -353,14 +504,258 @@ def compile_trace_chunks(plans, chunk_events: int = 262_144):
     n = 0
     for p in plans:
         batch.append(p)
-        n += len(p.events)
+        n += _plan_n_events(p)
         if n >= chunk_events:
-            yield _compile_events([q.events for q in batch],
-                                  intern, page_keys), batch
+            yield _compile_plans(batch, intern, page_keys), batch
             batch, n = [], 0
     if batch:
-        yield _compile_events([q.events for q in batch],
-                              intern, page_keys), batch
+        yield _compile_plans(batch, intern, page_keys), batch
+
+
+class TemplatedPlan:
+    """A template instance: one geometry's compiled skeleton plus this
+    step's page-key relabel — the ``(template_key, page_map)`` record
+    the serving engine emits instead of a fresh event graph.
+
+    Duck-types ``StreamPlan`` for every replay-path consumer (name /
+    dtype / page_bytes / macs / n_calls / step counters), while
+    ``compile_trace_chunks`` / ``trace_footprint`` /
+    ``PlanSchedule.compile`` splice the skeleton arrays directly.
+    Anything that genuinely needs the event graph (the functional
+    executor, the event-engine parity path, event-level invariants)
+    still works: ``.events`` lazily re-runs the original builder with
+    this instance's real page ids and caches the result, so the
+    materialized plan is exactly what the non-templated path would
+    have recorded."""
+
+    total_steps = 0
+    sampled_steps = 0
+    exact_events = 0
+
+    __slots__ = ("skeleton", "inst_keys", "name", "dtype", "page_bytes",
+                 "macs", "n_calls", "_build", "_plan", "_compiled")
+
+    def __init__(self, skeleton: CompiledPlan, inst_keys: list, *,
+                 name: str, dtype: str, page_bytes: int, macs: int,
+                 n_calls: int, build):
+        self.skeleton = skeleton
+        self.inst_keys = inst_keys    # relabeled skeleton.page_keys
+        self.name = name
+        self.dtype = dtype
+        self.page_bytes = page_bytes
+        self.macs = macs
+        self.n_calls = n_calls
+        self._build = build
+        self._plan = None
+        self._compiled = None
+
+    @property
+    def n_events(self) -> int:
+        return self.skeleton.n_events
+
+    @property
+    def n_exact_events(self) -> int:
+        return self.skeleton.n_events
+
+    def materialize(self) -> StreamPlan:
+        """The full event-graph ``StreamPlan`` this instance stands
+        for (the builder re-run with the real page ids) — cached."""
+        p = self._plan
+        if p is None:
+            p = self._plan = self._build()
+        return p
+
+    @property
+    def events(self) -> list:
+        return self.materialize().events
+
+    @property
+    def tensors(self) -> dict:
+        return self.materialize().tensors
+
+    @property
+    def footprint_pages(self) -> int:
+        return self.materialize().footprint_pages
+
+    def counts(self) -> dict:
+        return self.materialize().counts()
+
+    def validate(self) -> None:
+        pass                  # structure was validated at template time
+
+    def compile(self) -> CompiledPlan:
+        """Standalone compiled form: the skeleton re-interned under
+        this instance's keys (collapsing duplicates in first-access
+        order), sharing every geometry array and page-id-independent
+        memo entry with the skeleton — identical arrays to compiling
+        the freshly built plan."""
+        c = self._compiled
+        if c is None:
+            intern: dict = {}
+            page_keys: list = []
+            ids = _reintern_skeleton(self.skeleton, self.inst_keys,
+                                     intern, page_keys)
+            c = dataclasses.replace(
+                self.skeleton, page_keys=page_keys, trace_ids=ids,
+                memo=_geometry_memo(self.skeleton.memo))
+            self._compiled = c
+        return c
+
+
+class PlanTemplate:
+    """Compile-once, instance-many plan templating (the tentpole of
+    O(unique structure) trace construction).
+
+    A serving trace is thousands of structurally identical plans:
+    every decode step at a given page-table composition, every prefill
+    at a given (prompt, span) shape, every swap of n pages — only the
+    pool page ids (and the swap tag) differ step to step.  A template
+    builds and compiles the plan ONCE per geometry, with canonical
+    page ids ``0..n-1``, then hands out ``TemplatedPlan`` instances
+    whose construction cost is one dict lookup plus an O(pages
+    touched) key relabel.  Slot-bearing names and per-request uids
+    never enter the geometry key (they don't change the compiled
+    arrays); score/output scratch keys relabel to themselves, exactly
+    as the raw builders reuse them across steps."""
+
+    def __init__(self, maxsize: int = 512):
+        self._cache: collections.OrderedDict = collections.OrderedDict()
+        self._maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+
+    def clear(self) -> None:
+        self._cache.clear()
+        self.hits = self.misses = 0
+
+    def _skeleton(self, key, build):
+        ent = self._cache.get(key)
+        if ent is None:
+            self.misses += 1
+            plan = build()
+            ent = (plan.compile(), plan)
+            self._cache[key] = ent
+            if len(self._cache) > self._maxsize:
+                self._cache.popitem(last=False)
+        else:
+            self.hits += 1
+            self._cache.move_to_end(key)
+        return ent
+
+    @staticmethod
+    def _pool_relabel(sk: CompiledPlan, pools, idmap: dict) -> list:
+        """Relabel the skeleton's key slots: canonical pool-page ids
+        map through ``idmap`` inside the named pool namespaces; every
+        other key (score/output scratch, weight and activation pages)
+        is shared across instances on purpose."""
+        keys = []
+        for key in sk.page_keys:
+            t, p = key
+            a = idmap.get(p) if t in pools else None
+            keys.append(key if a is None else (t, a))
+        return keys
+
+    # ------------------------------------------------------- builders
+    def decode_step(self, page_tables, lens, page_tokens: int,
+                    n_kv_heads: int, head_dim: int, elem: int, *,
+                    n_q_heads: Optional[int] = None, n_layers: int = 1,
+                    out: str = "decode_out",
+                    name: str = "decode_step") -> TemplatedPlan:
+        tables = [tuple(int(p) for p in t) for t in page_tables]
+        lens = [int(ln) for ln in lens]
+        npgs = tuple(len(t) for t in tables)
+        HQ = n_kv_heads if n_q_heads is None else n_q_heads
+        key = ("decode", npgs, page_tokens, n_kv_heads, head_dim, elem,
+               HQ, n_layers, out)
+        canon: list = []
+        c = 0
+        for npg in npgs:
+            canon.append(tuple(range(c, c + npg)))
+            c += npg
+        sk, skp = self._skeleton(key, lambda: decode_step_plan(
+            canon, [npg * page_tokens for npg in npgs], page_tokens,
+            n_kv_heads, head_dim, elem, n_q_heads=n_q_heads,
+            n_layers=n_layers, out=out, name=name))
+        idmap: dict = {}
+        for ct, at in zip(canon, tables):
+            for cp_, ap in zip(ct, at):
+                idmap[cp_] = ap
+        pools = set()
+        for i in range(n_layers):
+            P = f"L{i}." if n_layers > 1 else ""
+            pools.update((P + "k", P + "v"))
+        build = lambda: decode_step_plan(
+            tables, lens, page_tokens, n_kv_heads, head_dim, elem,
+            n_q_heads=n_q_heads, n_layers=n_layers, out=out, name=name)
+        return TemplatedPlan(
+            sk, self._pool_relabel(sk, pools, idmap), name=name,
+            dtype=skp.dtype, page_bytes=skp.page_bytes, macs=skp.macs,
+            n_calls=skp.n_calls, build=build)
+
+    def prefill(self, page_table, prompt_len: int, page_tokens: int,
+                n_kv_heads: int, head_dim: int, elem: int, *,
+                n_q_heads: Optional[int] = None,
+                d_model: Optional[int] = None,
+                d_ff: Optional[int] = None, n_layers: int = 1,
+                span: Optional[tuple] = None,
+                out: str = "prefill_out",
+                name: str = "prefill") -> TemplatedPlan:
+        T = int(prompt_len)
+        npg = -(-T // page_tokens)
+        tbl = tuple(int(p) for p in page_table)[:npg]
+        if len(tbl) != npg:
+            raise ValueError(
+                f"page_table holds {len(page_table)} pages but a "
+                f"{T}-token prompt needs {npg}")
+        sp = None if span is None else (int(span[0]), int(span[1]))
+        HQ = n_kv_heads if n_q_heads is None else n_q_heads
+        key = ("prefill", T, sp, page_tokens, n_kv_heads, head_dim,
+               elem, HQ, d_model, d_ff, n_layers, out)
+        sk, skp = self._skeleton(key, lambda: prefill_plan(
+            tuple(range(npg)), T, page_tokens, n_kv_heads, head_dim,
+            elem, n_q_heads=n_q_heads, d_model=d_model, d_ff=d_ff,
+            n_layers=n_layers, span=sp, out=out, name=name))
+        idmap = dict(zip(range(npg), tbl))
+        pools = set()
+        for i in range(n_layers):
+            P = f"L{i}." if n_layers > 1 else ""
+            pools.update((P + "k", P + "v"))
+        build = lambda: prefill_plan(
+            tbl, T, page_tokens, n_kv_heads, head_dim, elem,
+            n_q_heads=n_q_heads, d_model=d_model, d_ff=d_ff,
+            n_layers=n_layers, span=sp, out=out, name=name)
+        s0, s1 = (0, T) if sp is None else sp
+        tag = "" if sp is None else f".{s0}-{s1}"
+        return TemplatedPlan(
+            sk, self._pool_relabel(sk, pools, idmap),
+            name=f"{name}{T}t{n_layers}l{tag}", dtype=skp.dtype,
+            page_bytes=skp.page_bytes, macs=skp.macs,
+            n_calls=skp.n_calls, build=build)
+
+    def swap(self, n_pages: int, page_tokens: int, n_kv_heads: int,
+             head_dim: int, elem: int, *, direction: str, tag,
+             n_layers: int = 1) -> TemplatedPlan:
+        key = ("swap", n_pages, direction, n_layers, page_tokens,
+               n_kv_heads, head_dim, elem)
+        sk, skp = self._skeleton(key, lambda: swap_plan(
+            n_pages, page_tokens, n_kv_heads, head_dim, elem,
+            direction=direction, tag=0, n_layers=n_layers))
+        # every skeleton key is (ns, (0, j)) — retag the host region
+        inst_keys = [(t, (tag, p[1])) for t, p in sk.page_keys]
+        build = lambda: swap_plan(
+            n_pages, page_tokens, n_kv_heads, head_dim, elem,
+            direction=direction, tag=tag, n_layers=n_layers)
+        return TemplatedPlan(
+            sk, inst_keys, name=f"swap_{direction}.u{tag}",
+            dtype=skp.dtype, page_bytes=skp.page_bytes, macs=skp.macs,
+            n_calls=skp.n_calls, build=build)
+
+
+# Process-global template store: geometry keys are fully qualified
+# (page/head/layer shapes, element size, span, output name), so one
+# cache safely serves every engine in the process; forked sweep
+# workers inherit a read-only snapshot and grow their own entries.
+PLAN_TEMPLATES = PlanTemplate()
 
 
 # --------------------------------------------------------------- compose
@@ -471,10 +866,11 @@ class PlanSchedule:
         """One compiled stream over the schedule's segments back to
         back (page interning shared, segment boundaries recorded), so
         the compiled replayer can walk a whole sampling pass on one
-        continuous timeline — cached on the schedule instance."""
+        continuous timeline — cached on the schedule instance.
+        Templated segments splice their skeletons (no event graphs)."""
         c = self.__dict__.get("_compiled")
         if c is None:
-            c = _compile_events([p.events for p, _ in self.segments])
+            c = _compile_plans([p for p, _ in self.segments])
             self.__dict__["_compiled"] = c
         return c
 

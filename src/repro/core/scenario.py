@@ -35,6 +35,7 @@ from __future__ import annotations
 import dataclasses
 import difflib
 import functools
+import os
 import time
 from collections import OrderedDict
 from typing import Callable, Optional, Sequence
@@ -684,6 +685,39 @@ def clear_caches():
     cache_hits = cache_misses = 0
 
 
+def _reset_caches_after_fork():
+    # a forked sweep worker must not inherit the parent's LRU state:
+    # cached compiled plans are order-100 MB of copy-on-write pages and
+    # the child's own churn would silently dirty them — start empty and
+    # let each process fill (and release) its own caches
+    global cache_hits, cache_misses
+    _PLAN_CACHE.clear()
+    _TRACE_CACHE.clear()
+    cache_hits = cache_misses = 0
+
+
+if hasattr(os, "register_at_fork"):
+    os.register_at_fork(after_in_child=_reset_caches_after_fork)
+
+
+def _pool_executor(workers: int):
+    """A ``ProcessPoolExecutor`` for sweep fan-out, or ``None`` for the
+    inline path.  Prefers the fork start method (workers inherit the
+    imported module graph; the at-fork hooks above give each child
+    empty caches and an empty scratch pool) and falls back to the
+    platform default where fork is unavailable."""
+    if workers <= 1:
+        return None
+    import concurrent.futures
+    import multiprocessing
+    try:
+        ctx = multiprocessing.get_context("fork")
+    except ValueError:
+        ctx = multiprocessing.get_context()
+    return concurrent.futures.ProcessPoolExecutor(
+        max_workers=workers, mp_context=ctx)
+
+
 def _cache_get(cache: OrderedDict, key):
     """LRU read: a hit refreshes recency, so an interleaved sweep
     cannot evict its own hot plan."""
@@ -1058,8 +1092,30 @@ class TuneResult:
                 "points": [tp.to_json() for tp in self.points]}
 
 
+def _tune_group(payload: tuple) -> list:
+    """Price one (dtype, page_bytes) tune group: lower the scenario
+    once and config-batch-replay every design point of the group.
+    Module-level and plain-data in/out (Scenario + DesignPoints in,
+    GemmResults out) so ``tune(workers=N)`` can fan groups over a
+    process pool; scoring stays in the parent, so the objective
+    callable never needs to be picklable."""
+    sc, dt, pb, points, hpe, in_worker = payload
+    from repro.accesys.pipeline import release_scratch, replay_batch
+    from repro.core import design_space as DS
+    plan, _, _, _ = _plan_for(
+        dataclasses.replace(sc, dtype=dt, page_bytes=pb),
+        resolve(sc.model))
+    results = replay_batch(
+        [DS.system_for_point(p) for p in points], plan,
+        host_s_per_elem=hpe)
+    if in_worker:
+        release_scratch()      # workers drop their scratch before exit
+    return results
+
+
 def tune(sc: Scenario, space=None, objective="latency", *,
-         host_s_per_elem: Optional[float] = None) -> TuneResult:
+         host_s_per_elem: Optional[float] = None,
+         workers: int = 1) -> TuneResult:
     """Search a co-design knob space against one workload: lower ``sc``
     once per distinct (dtype, page_bytes) — those change the plan — and
     price every ``DesignPoint`` of each group in ONE config-batched
@@ -1074,8 +1130,13 @@ def tune(sc: Scenario, space=None, objective="latency", *,
     latency-vs-area Pareto frontier is marked regardless of objective.
     Per-point results equal a sequential ``simulate()`` of the same
     configuration at rtol 1e-9 — DM/DC/DevMem orderings match
-    ``sweep()``."""
-    from repro.accesys.pipeline import HOST_S_PER_ELEM, replay_batch
+    ``sweep()``.
+
+    ``workers > 1`` fans the per-(dtype, page_bytes) groups over a
+    process pool (each worker prices its groups with its own scratch
+    pool and releases it on the way out); results and ordering are
+    identical to ``workers=1``."""
+    from repro.accesys.pipeline import HOST_S_PER_ELEM
     from repro.core import design_space as DS
     target = resolve(sc.model)
     if target.kind == "serve":
@@ -1108,13 +1169,17 @@ def tune(sc: Scenario, space=None, objective="latency", *,
     for i, p in enumerate(pts):
         groups.setdefault((p.dtype, p.page_bytes), []).append(i)
     scored: list = [None] * len(pts)
-    for (dt, pb), idxs in groups.items():
-        plan, _, _, _ = _plan_for(
-            dataclasses.replace(sc, dtype=dt, page_bytes=pb), target)
-        cfgs = [DS.system_for_point(pts[i]) for i in idxs]
-        results = replay_batch(
-            cfgs, plan,
-            host_s_per_elem=host_s_per_elem or HOST_S_PER_ELEM)
+    hpe = host_s_per_elem or HOST_S_PER_ELEM
+    ex = _pool_executor(min(workers, len(groups)))
+    payloads = [(sc, dt, pb, [pts[i] for i in idxs], hpe, ex is not None)
+                for (dt, pb), idxs in groups.items()]
+    try:
+        group_results = list(ex.map(_tune_group, payloads)) \
+            if ex is not None else [_tune_group(p) for p in payloads]
+    finally:
+        if ex is not None:
+            ex.shutdown()
+    for idxs, results in zip(groups.values(), group_results):
         for i, r in zip(idxs, results):
             scored[i] = TunedPoint(
                 point=pts[i], result=r,
@@ -1225,6 +1290,81 @@ class LoadSweepResult:
                 "points": [pt.to_json() for pt in self.points]}
 
 
+def _run_load_point(payload: tuple) -> list:
+    """Price ONE offered rate across every memory mode: rebuild the
+    engine and system configs from the plain-data payload (picklable,
+    so ``sweep_load(workers=N)`` can fan rates over a process pool),
+    run the two-pass streamed replay, and return the per-mode
+    ``LoadPoint`` list.  Pure in the payload — a workers=N sweep is
+    byte-identical to workers=1, which runs this same function
+    inline."""
+    import numpy as np
+    from repro.accesys.pipeline import (release_scratch,
+                                        replay_trace_streamed)
+    from repro.configs import get_reduced
+    from repro.core.plan import _plan_n_events, trace_footprint
+    from repro.serving.engine import Request, ServingEngine, arrival_times
+    from repro.serving.sim_report import ServingAccumulator
+
+    (sh, pool, modes, arrivals, n_requests, open_kw, hpe,
+     chunk_events, lam, caching, templated, in_worker) = payload
+    cfg_model = get_reduced(sh["arch"])
+    sys_cfgs = [system_for(Scenario(model="serve", mode=m))
+                for m in modes]
+
+    def mk_engine() -> ServingEngine:
+        return ServingEngine(
+            cfg_model, slots=sh["slots"], max_seq=sh["max_seq"],
+            plan_only=True, kv_page_tokens=sh["kv_page_tokens"],
+            kv_pool_pages=pool, templated=templated,
+            prefix_tokens=sh["prefix_tokens"], prefix_caching=caching)
+
+    def mk_requests() -> list:
+        rng = np.random.default_rng(sh["seed"] + 1)
+        lo, hi = sh["prompt_lo"], sh["prompt_hi"]
+        return [Request(
+            uid=i,
+            prompt=rng.integers(
+                1, 250,
+                size=lo if lo >= hi else int(rng.integers(lo, hi))
+            ).astype(np.int32),
+            max_new_tokens=sh["max_new_tokens"])
+            for i in range(n_requests)]
+
+    arr = arrival_times(arrivals, n_requests, lam, seed=sh["seed"])
+    eng1 = mk_engine()
+    counts = {"records": 0, "events": 0}
+
+    def plans_pass1():
+        for rec in eng1.open_loop_records(mk_requests(), arr,
+                                          **open_kw):
+            counts["records"] += 1
+            counts["events"] += _plan_n_events(rec.plan)
+            yield rec.plan
+    foot = trace_footprint(plans_pass1())
+    acc = ServingAccumulator()
+    eng2 = mk_engine()
+
+    def plans_pass2():
+        return (rec.plan for rec in acc.wrap(
+            eng2.open_loop_records(mk_requests(), arr, **open_kw)))
+    results, pers = replay_trace_streamed(
+        sys_cfgs, plans_pass2, host_s_per_elem=hpe,
+        footprint_pages=foot, chunk_events=chunk_events)
+    live = eng2.unfinished_uids()
+    pts = [LoadPoint(
+        qps=lam, mode=m, percentiles=rep.percentiles(),
+        total_s=rep.total_s, n_finished=eng2.n_finished,
+        n_records=counts["records"], n_events=counts["events"],
+        drained=eng2.stats.drained)
+        for m, rep in zip(modes, (
+            acc.report(m, r, p, live)
+            for m, r, p in zip(modes, results, pers)))]
+    if in_worker:
+        release_scratch()      # workers drop their scratch before exit
+    return pts
+
+
 def sweep_load(qps=None, *, n_requests: int = 1000,
                arrivals: str = "poisson", modes=MODES,
                prefix_caching: bool = True,
@@ -1232,6 +1372,7 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
                max_steps: int = 1_000_000,
                preempt: str = "none", stall_budget_s: float = 0.0,
                host_s_per_elem: Optional[float] = None,
+               workers: int = 1, templated: bool = True,
                **shape) -> LoadSweepResult:
     """Capacity-plan an open-loop serving workload: drive the
     plan-only engine at each offered rate in ``qps`` (auto: a grid
@@ -1257,23 +1398,27 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
 
     The engine's admission clock is calibrated from a small probe
     trace priced on the DC system; reported latencies always come
-    from the replay itself, never from the estimates."""
+    from the replay itself, never from the estimates.
+
+    ``workers > 1`` fans the offered-rate grid over a process pool
+    (each worker re-derives its traces and prices with its own scratch
+    pool, released on the way out); the grid extensions and the prefix
+    delta stay sequential because they depend on earlier points.  The
+    result is byte-identical to ``workers=1``, and — since templated
+    plans replay bitwise identically — to ``templated=False``, which
+    rebuilds every plan as a fresh event graph (the pre-templating
+    path, kept for benchmarking the template speedup)."""
     import numpy as np
     from repro.accesys.pipeline import (HOST_S_PER_ELEM, release_scratch,
-                                        replay_trace,
-                                        replay_trace_streamed)
+                                        replay_trace)
     from repro.configs import get_reduced
-    from repro.core.plan import trace_footprint
-    from repro.serving.engine import Request, ServingEngine, arrival_times
-    from repro.serving.sim_report import ServingAccumulator
+    from repro.serving.engine import Request, ServingEngine
 
     t0 = time.perf_counter()
     sh = _merge_params("load", LOAD_SHAPE, shape)
     hpe = host_s_per_elem or HOST_S_PER_ELEM
     modes = tuple(modes)
     cfg_model = get_reduced(sh["arch"])
-    sys_cfgs = [system_for(Scenario(model="serve", mode=m))
-                for m in modes]
 
     pool = sh["kv_pool_pages"]
     if pool is None and preempt != "none":
@@ -1293,7 +1438,7 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
         return ServingEngine(
             cfg_model, slots=sh["slots"], max_seq=sh["max_seq"],
             plan_only=True, kv_page_tokens=sh["kv_page_tokens"],
-            kv_pool_pages=pool,
+            kv_pool_pages=pool, templated=templated,
             prefix_tokens=sh["prefix_tokens"], prefix_caching=caching)
 
     def mk_requests(n: int) -> list:
@@ -1336,80 +1481,66 @@ def sweep_load(qps=None, *, n_requests: int = 1000,
                    max_steps=max_steps, preempt=preempt,
                    stall_budget_s=stall_budget_s)
 
-    def run_point(lam: float, caching: bool):
-        """One offered rate, all modes in one streamed replay."""
-        arr = arrival_times(arrivals, n_requests, lam, seed=sh["seed"])
-        eng1 = mk_engine(caching)
-        counts = {"records": 0, "events": 0}
+    ex = _pool_executor(workers)
 
-        def plans_pass1():
-            for rec in eng1.open_loop_records(
-                    mk_requests(n_requests), arr, **open_kw):
-                counts["records"] += 1
-                counts["events"] += len(rec.plan.events)
-                yield rec.plan
-        foot = trace_footprint(plans_pass1())
-        acc = ServingAccumulator()
-        eng2 = mk_engine(caching)
-
-        def plans_pass2():
-            return (rec.plan for rec in acc.wrap(
-                eng2.open_loop_records(mk_requests(n_requests), arr,
-                                       **open_kw)))
-        results, pers = replay_trace_streamed(
-            sys_cfgs, plans_pass2, host_s_per_elem=hpe,
-            footprint_pages=foot, chunk_events=chunk_events)
-        live = eng2.unfinished_uids()
-        return [LoadPoint(
-            qps=lam, mode=m, percentiles=rep.percentiles(),
-            total_s=rep.total_s, n_finished=eng2.n_finished,
-            n_records=counts["records"], n_events=counts["events"],
-            drained=eng2.stats.drained)
-            for m, rep in zip(modes, (
-                acc.report(m, r, p, live)
-                for m, r, p in zip(modes, results, pers)))]
+    def price(lams, caching: bool) -> list:
+        """Per-mode LoadPoints for each rate in ``lams``, in order —
+        inline when serial, fanned over the pool otherwise."""
+        payloads = [(sh, pool, modes, arrivals, n_requests, open_kw,
+                     hpe, chunk_events, lam, caching, templated,
+                     ex is not None)
+                    for lam in lams]
+        if ex is None:
+            return [_run_load_point(p) for p in payloads]
+        return list(ex.map(_run_load_point, payloads))
 
     caching_main = prefix_caching and sh["prefix_tokens"] > 0
     points: list = []
-    for lam in qps:
-        points += run_point(lam, caching_main)
+    try:
+        for mode_pts in price(qps, caching_main):
+            points += mode_pts
 
-    def compute_knee() -> dict:
-        knee = {}
-        for m in modes:
-            curve = [pt for pt in points if pt.mode == m]
-            base = curve[0].percentiles["ttft_p99_us"]
-            knee[m] = next(
-                (pt.qps for pt in curve
-                 if pt.percentiles["ttft_p99_us"]
-                 > knee_factor * base), None)
-        return knee
+        def compute_knee() -> dict:
+            knee = {}
+            for m in modes:
+                curve = [pt for pt in points if pt.mode == m]
+                base = curve[0].percentiles["ttft_p99_us"]
+                knee[m] = next(
+                    (pt.qps for pt in curve
+                     if pt.percentiles["ttft_p99_us"]
+                     > knee_factor * base), None)
+            return knee
 
-    knee = compute_knee()
-    # preemption sweeps must price the thrash regime: keep doubling
-    # the top rate (bounded) until every mode has a grid point
-    # STRICTLY past its knee
-    extensions = 0
-    while preempt != "none" and extensions < 3 and any(
-            knee[m] is None or knee[m] >= qps[-1] for m in modes):
-        lam = round(qps[-1] * 2.0, 3)
-        qps = qps + (lam,)
-        points += run_point(lam, caching_main)
         knee = compute_knee()
-        extensions += 1
-    prefix_delta = None
-    if sh["prefix_tokens"] > 0:
-        other = run_point(qps[0], not caching_main)
-        prefix_delta = {}
-        for pt_main, pt_other in zip(
-                [pt for pt in points if pt.qps == qps[0]], other):
-            on, off = (pt_main, pt_other) if caching_main else \
-                (pt_other, pt_main)
-            prefix_delta[pt_main.mode] = {
-                "ttft_p99_us_on": on.percentiles["ttft_p99_us"],
-                "ttft_p99_us_off": off.percentiles["ttft_p99_us"],
-                "total_s_on": on.total_s, "total_s_off": off.total_s,
-                "records_on": on.n_records, "records_off": off.n_records}
+        # preemption sweeps must price the thrash regime: keep doubling
+        # the top rate (bounded) until every mode has a grid point
+        # STRICTLY past its knee
+        extensions = 0
+        while preempt != "none" and extensions < 3 and any(
+                knee[m] is None or knee[m] >= qps[-1] for m in modes):
+            lam = round(qps[-1] * 2.0, 3)
+            qps = qps + (lam,)
+            points += price((lam,), caching_main)[0]
+            knee = compute_knee()
+            extensions += 1
+        prefix_delta = None
+        if sh["prefix_tokens"] > 0:
+            other = price((qps[0],), not caching_main)[0]
+            prefix_delta = {}
+            for pt_main, pt_other in zip(
+                    [pt for pt in points if pt.qps == qps[0]], other):
+                on, off = (pt_main, pt_other) if caching_main else \
+                    (pt_other, pt_main)
+                prefix_delta[pt_main.mode] = {
+                    "ttft_p99_us_on": on.percentiles["ttft_p99_us"],
+                    "ttft_p99_us_off": off.percentiles["ttft_p99_us"],
+                    "total_s_on": on.total_s,
+                    "total_s_off": off.total_s,
+                    "records_on": on.n_records,
+                    "records_off": off.n_records}
+    finally:
+        if ex is not None:
+            ex.shutdown()
     release_scratch()
     return LoadSweepResult(
         arch=sh["arch"], arrivals=arrivals, qps=qps, modes=modes,

@@ -146,7 +146,8 @@ def _run_load_sweep(args) -> int:
                      arrivals=args.arrivals, modes=tuple(args.modes),
                      prefix_tokens=args.prefix_tokens,
                      preempt=args.preempt,
-                     stall_budget_s=args.stall_budget_us * 1e-6)
+                     stall_budget_s=args.stall_budget_us * 1e-6,
+                     workers=args.workers)
     cal = res.calibration
     pool = f", pool={res.kv_pool_pages} pages" \
         if res.kv_pool_pages is not None else ""
@@ -250,6 +251,9 @@ def main(argv=None) -> int:
     ap.add_argument("--swap", action="store_true",
                     help="serve only: print per-point preemption / "
                          "swap-DMA / queue-delay tail columns")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-pool width for --arrivals sweep "
+                         "points (results identical to --workers 1)")
     args = ap.parse_args(argv)
     if args.list:
         print("\n".join(scenario_names()))

@@ -147,7 +147,7 @@ class ServingEngine:
                  kv_dtype: str = "float16",
                  kv_pool_pages: Optional[int] = None,
                  plan_only: bool = False, prefix_tokens: int = 0,
-                 prefix_caching: bool = False):
+                 prefix_caching: bool = False, templated: bool = True):
         """``plan_only=True`` skips model/cache/jit construction
         entirely (``params`` unused) and drives the shadow PageTable
         alone — the open-loop capacity-planning mode, where generated
@@ -155,7 +155,13 @@ class ServingEngine:
         ``prefix_tokens`` prepends a shared system prompt to every
         request; with ``prefix_caching=True`` its pages are interned
         once per trace (``reserve_prefix``) and every request maps
-        them read-only, otherwise each request re-prefills them."""
+        them read-only, otherwise each request re-prefills them.
+        ``templated`` (default) emits template-instanced plan records
+        — each decode/prefill/swap record is a compiled-skeleton
+        page-id relabel instead of a fresh event graph, pricing
+        bitwise-identically (``templated=False`` restores event-built
+        records; ``.events`` on a templated record rebuilds them on
+        demand)."""
         self.cfg = cfg
         self.plan_only = plan_only
         record_plans = record_plans or plan_only
@@ -205,7 +211,7 @@ class ServingEngine:
                     head_dim=cfg.resolved_head_dim,
                     max_pages_per_seq=pages_per_seq,
                     dtype=kv_dtype),
-                max_seqs=slots)
+                max_seqs=slots, templated=templated)
         if self._prefix_tokens:
             if self._table is None:
                 raise ValueError("prefix_tokens needs record_plans")

@@ -51,9 +51,13 @@ class PageTable:
     cache with one of these to emit a StreamPlan per decode step at
     bookkeeping cost."""
 
-    def __init__(self, cfg: PagedCacheConfig, max_seqs: int):
+    def __init__(self, cfg: PagedCacheConfig, max_seqs: int,
+                 templated: bool = False):
         self.cfg = cfg
         self.max_seqs = max_seqs
+        # route the plan builders through core.plan.PLAN_TEMPLATES:
+        # one compile per geometry, O(pages) page-id relabels per step
+        self.templated = templated
         self._free = list(range(cfg.n_pages - 1, -1, -1))
         self.tables = np.zeros((max_seqs, cfg.max_pages_per_seq), np.int32)
         self.lens = np.zeros((max_seqs,), np.int32)
@@ -155,7 +159,9 @@ class PageTable:
         n_swap = self.written_own_pages(slot, tokens)
         plan = None
         if n_swap:
-            plan = plan_ir.swap_plan(
+            build = plan_ir.PLAN_TEMPLATES.swap if self.templated \
+                else plan_ir.swap_plan
+            plan = build(
                 n_swap, self.cfg.page_tokens, self.cfg.n_kv_heads,
                 self.cfg.head_dim, _np_itemsize(self.cfg.dtype),
                 direction="out", tag=tag, n_layers=n_layers)
@@ -170,7 +176,9 @@ class PageTable:
         (``alloc_seq``) separately — the restored data may land on
         different pool page ids."""
         from repro.core import plan as plan_ir
-        return plan_ir.swap_plan(
+        build = plan_ir.PLAN_TEMPLATES.swap if self.templated \
+            else plan_ir.swap_plan
+        return build(
             n_pages, self.cfg.page_tokens, self.cfg.n_kv_heads,
             self.cfg.head_dim, _np_itemsize(self.cfg.dtype),
             direction="in", tag=tag, n_layers=n_layers)
@@ -251,7 +259,9 @@ class PageTable:
                   if self.active[s] else [] for s in slots]
         lens = [int(self.lens[s]) if self.active[s] else 0
                 for s in slots]
-        return plan_ir.decode_step_plan(
+        build = plan_ir.PLAN_TEMPLATES.decode_step if self.templated \
+            else plan_ir.decode_step_plan
+        return build(
             tables, lens, self.cfg.page_tokens, self.cfg.n_kv_heads,
             self.cfg.head_dim, _np_itemsize(self.cfg.dtype), out=out,
             n_q_heads=n_q_heads, n_layers=n_layers)
@@ -273,7 +283,9 @@ class PageTable:
         if prompt_len is None:
             prompt_len = int(self.lens[slot]) or held * \
                 self.cfg.page_tokens
-        return plan_ir.prefill_plan(
+        build = plan_ir.PLAN_TEMPLATES.prefill if self.templated \
+            else plan_ir.prefill_plan
+        return build(
             self.tables[slot, :held], prompt_len, self.cfg.page_tokens,
             self.cfg.n_kv_heads, self.cfg.head_dim,
             _np_itemsize(self.cfg.dtype), n_q_heads=n_q_heads,
@@ -290,7 +302,9 @@ class PageTable:
         every later request re-streams these pages during attention,
         which is where the cross-request LLC/TLB reuse win shows up."""
         from repro.core import plan as plan_ir
-        return plan_ir.prefill_plan(
+        build = plan_ir.PLAN_TEMPLATES.prefill if self.templated \
+            else plan_ir.prefill_plan
+        return build(
             np.asarray(pages, np.int32), prompt_len,
             self.cfg.page_tokens, self.cfg.n_kv_heads,
             self.cfg.head_dim, _np_itemsize(self.cfg.dtype),

@@ -1,0 +1,284 @@
+"""Template-compiled plan instancing: property + parity tests.
+
+A ``PlanTemplate`` compiles each decode/prefill/swap geometry ONCE to
+a ``CompiledPlan`` skeleton; per-step instances are cheap page-id
+relabels.  The contract under test:
+
+  * an instance's compiled arrays EQUAL a freshly built plan's —
+    every column, dtype, and the interned page-key order — for random
+    geometries and page maps (including shared pages, empty slots,
+    partial pages, chunked-prefill spans, swap both directions);
+  * instance memos carry only page-id-independent entries, so the
+    cross-chunk LRU seeding stays exact;
+  * a templated serving trace replays BITWISE identically (rtol 0,
+    every ``GemmResult`` field, all three modes) to its event-built
+    twin at chunk sizes 1 / odd / inf, including swap-bearing
+    preemption traces;
+  * per-request attribution (``RequestSim`` additive identities) is
+    invariant under templating;
+  * ``sweep_load(workers=N)`` / ``tune(workers=N)`` equal workers=1.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.accesys.pipeline import replay_trace, replay_trace_streamed
+from repro.core import plan as plan_ir
+from repro.core.plan import (PLAN_TEMPLATES, PlanTemplate,
+                             _GEOMETRY_MEMO_KEYS, _plan_n_events,
+                             trace_footprint)
+from repro.core.scenario import MODES, Scenario, system_for
+from repro.serving.engine import Request, ServingEngine, arrival_times
+
+ELEM = 1
+COMPILED_COLS = ("trace_ids", "trace_nbytes", "trace_is_out",
+                 "in_lane", "op_kind", "op_val", "grp_end", "n_lanes",
+                 "seg_op", "seg_trace")
+
+
+def _cfgs():
+    return [system_for(Scenario(model="serve", mode=m)) for m in MODES]
+
+
+def _assert_compiled_equal(a, b, label=""):
+    assert a.n_events == b.n_events, label
+    assert a.page_keys == b.page_keys, label
+    for f in COMPILED_COLS:
+        x, y = getattr(a, f), getattr(b, f)
+        assert x.dtype == y.dtype, (label, f, x.dtype, y.dtype)
+        assert np.array_equal(x, y), (label, f)
+
+
+def _assert_bitwise(res_a, per_a, res_b, per_b, label=""):
+    for f in dataclasses.fields(res_a):
+        a, b = getattr(res_a, f.name), getattr(res_b, f.name)
+        assert a == b, (label, f.name, a, b)
+    assert np.array_equal(per_a, per_b), (label, "per_plan")
+
+
+# ==================================== instance == fresh, per builder
+class TestInstanceEqualsFresh:
+    def test_decode_random_geometries_and_page_maps(self):
+        """25 random decode geometries x random page tables (shared
+        pages, empty slots, partial last pages) through ONE template
+        cache: instance compile == fresh-plan compile."""
+        rng = np.random.default_rng(0)
+        tpl = PlanTemplate()
+        for trial in range(25):
+            n_layers = int(rng.integers(1, 4))
+            pt = int(rng.choice([4, 8]))
+            kh = int(rng.choice([1, 2, 4]))
+            hq = kh * int(rng.choice([1, 2]))
+            hd = int(rng.choice([8, 16]))
+            shared = list(rng.choice(500, size=2, replace=False))
+            tables, lens = [], []
+            for _ in range(int(rng.integers(1, 5))):
+                own = int(rng.integers(0, 4))
+                t = ([int(p) for p in shared] if rng.random() < 0.3
+                     else []) + \
+                    [int(p) for p in rng.choice(
+                        np.arange(500, 900), size=own, replace=False)]
+                tables.append(t)
+                lens.append(0 if not t else
+                            len(t) * pt - int(rng.integers(0, pt)))
+            if not any(tables):
+                tables[0], lens[0] = [int(rng.integers(500))], pt
+            inst = tpl.decode_step(tables, lens, pt, kh, hd, ELEM,
+                                   n_q_heads=hq, n_layers=n_layers)
+            fresh = plan_ir.decode_step_plan(
+                tables, lens, pt, kh, hd, ELEM, n_q_heads=hq,
+                n_layers=n_layers)
+            _assert_compiled_equal(inst.compile(), fresh.compile(),
+                                   label=f"decode trial {trial}")
+            assert _plan_n_events(inst) == len(fresh.events)
+        # same geometry, new page ids -> a cache hit, still exact
+        hits0 = tpl.hits
+        remap = [[p + 1000 for p in t] for t in tables]
+        inst = tpl.decode_step(remap, lens, pt, kh, hd, ELEM,
+                               n_q_heads=hq, n_layers=n_layers)
+        fresh = plan_ir.decode_step_plan(remap, lens, pt, kh, hd,
+                                         ELEM, n_q_heads=hq,
+                                         n_layers=n_layers)
+        _assert_compiled_equal(inst.compile(), fresh.compile(),
+                               label="decode cache-hit remap")
+        assert tpl.hits == hits0 + 1
+
+    def test_prefill_random_geometries_including_spans(self):
+        rng = np.random.default_rng(1)
+        tpl = PlanTemplate()
+        for trial in range(20):
+            pt = int(rng.choice([4, 8]))
+            T = int(rng.integers(1, 5 * pt))
+            npg = -(-T // pt)
+            tbl = [int(p) for p in rng.choice(700, size=npg,
+                                              replace=False)]
+            kh, hd = 2, 8
+            n_layers = int(rng.integers(1, 3))
+            span = None
+            if npg > 1 and rng.random() < 0.5:
+                s0 = pt * int(rng.integers(0, npg - 1))
+                s1 = T if rng.random() < 0.5 else \
+                    pt * int(rng.integers(s0 // pt + 1, npg))
+                span = (s0, s1)
+            kw = dict(n_q_heads=4, n_layers=n_layers, span=span)
+            inst = tpl.prefill(tbl, T, pt, kh, hd, ELEM, **kw)
+            fresh = plan_ir.prefill_plan(tbl, T, pt, kh, hd, ELEM,
+                                         **kw)
+            _assert_compiled_equal(
+                inst.compile(), fresh.compile(),
+                label=f"prefill trial {trial} span={span}")
+
+    def test_swap_both_directions(self):
+        tpl = PlanTemplate()
+        for direction in ("out", "in"):
+            for n_pages in (1, 3):
+                for tag in (0, 7):
+                    inst = tpl.swap(n_pages, 8, 2, 16, ELEM,
+                                    direction=direction, tag=tag,
+                                    n_layers=2)
+                    fresh = plan_ir.swap_plan(
+                        n_pages, 8, 2, 16, ELEM, direction=direction,
+                        tag=tag, n_layers=2)
+                    _assert_compiled_equal(
+                        inst.compile(), fresh.compile(),
+                        label=f"swap {direction} {n_pages}p tag{tag}")
+
+    def test_instance_memo_is_geometry_only(self):
+        """Relabeled instances must not carry page-id-dependent memo
+        entries — ``_stream_seed_memo`` would otherwise seed chunked
+        LRU state from the WRONG page ids."""
+        tpl = PlanTemplate()
+        inst = tpl.decode_step([[3, 9], [12]], [16, 8], 8, 2, 16, ELEM)
+        memo = inst.compile().memo
+        assert set(memo) <= set(_GEOMETRY_MEMO_KEYS), set(memo)
+        assert "prev" not in memo and "sd" not in memo
+
+    def test_events_materialize_on_demand(self):
+        """``.events`` on a template instance rebuilds the true event
+        graph — identical to the fresh builder's."""
+        tbls, lens = [[5, 42], [17]], [16, 8]
+        inst = PLAN_TEMPLATES.decode_step(tbls, lens, 8, 2, 16, ELEM)
+        fresh = plan_ir.decode_step_plan(tbls, lens, 8, 2, 16, ELEM)
+        assert len(inst.events) == len(fresh.events)
+        for a, b in zip(inst.events, fresh.events):
+            assert (a.kind, a.nbytes, a.page, a.op) == \
+                (b.kind, b.nbytes, b.page, b.op)
+        assert trace_footprint([inst]) == trace_footprint([fresh])
+
+
+# ==================================== trace-level bitwise parity
+def _requests(n, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Request(
+        uid=i,
+        prompt=rng.integers(1, 250,
+                            size=int(rng.integers(4, 16))
+                            ).astype(np.int32),
+        max_new_tokens=int(rng.integers(1, 5)))
+        for i in range(n)]
+
+
+def _trace(templated, n=40, preempt=False):
+    from repro.configs import get_reduced
+    kw = dict(kv_pool_pages=4) if preempt else {}
+    eng = ServingEngine(get_reduced("qwen2_0_5b"), plan_only=True,
+                        slots=3, max_seq=48, kv_page_tokens=8,
+                        templated=templated, **kw)
+    arr = arrival_times("poisson", n, 400.0, seed=3)
+    eng.run_open_loop(_requests(n), arr, prefill_chunk_tokens=8,
+                      est_step_s=1e-4, est_prefill_s_per_token=1e-5,
+                      **(dict(preempt="lifo") if preempt else {}))
+    return eng
+
+
+class TestTemplatedTraceParity:
+    @pytest.mark.parametrize("preempt", [False, True])
+    def test_replay_bitwise_all_chunk_sizes(self, preempt):
+        """Templated trace vs event-built twin: same record/event
+        counts, bitwise GemmResults at chunk 1 / odd / inf, all three
+        modes — including the swap-bearing preemption trace."""
+        ev, tp = _trace(False, preempt=preempt), \
+            _trace(True, preempt=preempt)
+        plans_ev = [r.plan for r in ev.trace]
+        plans_tp = [r.plan for r in tp.trace]
+        assert len(plans_ev) == len(plans_tp)
+        assert [r.kind for r in ev.trace] == [r.kind for r in tp.trace]
+        assert sum(len(p.events) for p in plans_ev) == \
+            sum(_plan_n_events(p) for p in plans_tp)
+        if preempt:
+            assert tp.stats.preemptions == ev.stats.preemptions > 0
+            assert any(getattr(p, "skeleton", None) is not None
+                       and "swap" in p.name for p in plans_tp)
+        cfgs = _cfgs()
+        mono = [replay_trace(c, plans_ev) for c in cfgs]
+        for chunk in (1, 777, 10**9):
+            res, pers = replay_trace_streamed(cfgs, plans_tp,
+                                              chunk_events=chunk)
+            for (mr, mp), r, p, c in zip(mono, res, pers, cfgs):
+                _assert_bitwise(
+                    mr, mp, r, p,
+                    label=f"chunk={chunk} mode={c.mode} "
+                          f"preempt={preempt}")
+
+    def test_request_attribution_invariant(self):
+        """Satellite: ``RequestSim`` per-request attribution must be
+        invariant under templating — identical folds AND the additive
+        TTFT / e2e identities on the templated swap-bearing trace."""
+        from repro.serving.sim_report import simulate_serving_trace
+        ev, tp = _trace(False, preempt=True), _trace(True, preempt=True)
+        cfg = _cfgs()[1]                              # DC
+        rep_ev = simulate_serving_trace(cfg, ev.trace)
+        rep_tp = simulate_serving_trace(cfg, tp.trace)
+        assert rep_tp.percentiles() == rep_ev.percentiles()
+        assert rep_tp.total_s == rep_ev.total_s
+        for a, b in zip(rep_ev.requests, rep_tp.requests):
+            for f in dataclasses.fields(a):
+                x, y = getattr(a, f.name), getattr(b, f.name)
+                assert x == y or (isinstance(x, float)
+                                  and math.isnan(x) and math.isnan(y)), \
+                    (a.uid, f.name, x, y)
+        got_ttft = got_e2e = 0
+        for r in rep_tp.requests:
+            if not math.isnan(r.ttft_s):
+                assert abs(r.queue_s + r.prefill_s + r.swap_pre_s
+                           - r.ttft_s) <= 1e-12 + 1e-9 * r.ttft_s
+                got_ttft += 1
+            if not math.isnan(r.e2e_s) and not math.isnan(r.decode_s):
+                assert abs(r.ttft_s + r.decode_s + r.stall_s
+                           + r.swap_post_s - r.e2e_s) \
+                    <= 1e-12 + 1e-9 * r.e2e_s
+                got_e2e += 1
+        assert got_ttft > 0 and got_e2e > 0
+
+
+# ==================================== parallel sweep parity
+class TestParallelSweeps:
+    def test_sweep_load_workers_parity(self):
+        from repro.core.scenario import sweep_load
+        kw = dict(qps=(10.0, 30.0), n_requests=16)
+        j1 = sweep_load(**kw).to_json()
+        j2 = sweep_load(workers=2, **kw).to_json()
+        j1.pop("wall_s"), j2.pop("wall_s")
+        assert j1 == j2
+
+    def test_sweep_load_templated_matches_event_built(self):
+        from repro.core.scenario import sweep_load
+        kw = dict(qps=(10.0, 30.0), n_requests=16)
+        j1 = sweep_load(**kw).to_json()
+        j2 = sweep_load(templated=False, **kw).to_json()
+        j1.pop("wall_s"), j2.pop("wall_s")
+        assert j1 == j2
+
+    def test_tune_workers_parity(self):
+        from repro.core import design_space as DS
+        from repro.core.scenario import tune
+        pts = [DS.DesignPoint(dtype=dt, page_bytes=pb)
+               for dt in ("int8", "fp16") for pb in (2048, 4096)]
+        sc = Scenario(model="bert-base", seq=32)
+        r1 = tune(sc, space=pts)
+        r2 = tune(sc, space=pts, workers=2)
+        for a, b in zip(r1.points, r2.points):
+            assert a.result == b.result and a.score == b.score
+            assert a.on_pareto == b.on_pareto
