@@ -1,27 +1,43 @@
-"""Fig. 12 (+ wall-clock paragraph): memory locations × interconnects."""
-from repro.accesys import workloads as W
-from repro.accesys.components import DRAM
-from repro.accesys.system import (default_system, pcie_for_bw,
-                                  run_transformer_accel)
-from benchmarks.common import emit
+"""Fig. 12 (+ wall-clock paragraph): memory locations × interconnects,
+priced through the Scenario API (``pcie_gb_s`` is a pricing-time knob,
+so every bandwidth point reuses one lowered plan).  A tensor-parallel
+row rides along: the same host-64GB/s point sharded tp=2 over a
+64 GB/s ring, showing what device-to-device collectives cost next to
+the host link the figure sweeps.
+"""
+import dataclasses
+
+from repro.core.scenario import Scenario, simulate
+
+try:
+    from benchmarks.common import emit
+except ImportError:                    # run as a bare script
+    from common import emit
 
 
 def main():
     rows = []
     for model in ("vit-base-16", "vit-large-16", "vit-huge-14"):
-        wl = W.transformer_trace(model)
+        base = Scenario(model=model, mode="DC")
         ts = {}
         for bw in (2, 8, 64):
-            ts[bw] = run_transformer_accel(
-                default_system("DC", pcie=pcie_for_bw(bw)), wl).total_s
-        dev = run_transformer_accel(
-            default_system("DevMem", dram=DRAM("HBM2"),
-                           pcie=pcie_for_bw(64)), wl).total_s
+            ts[bw] = simulate(dataclasses.replace(
+                base, pcie_gb_s=float(bw))).total_s
+        dev = simulate(dataclasses.replace(
+            base, mode="DevMem", devmem_dram="HBM2",
+            pcie_gb_s=64.0)).total_s
         for bw, t in ts.items():
             rows.append((f"{model}.host{bw}GBs", round(t * 1e6, 1),
                          f"norm_vs_2GBs={ts[2] / t:.2f}x"))
         rows.append((f"{model}.devmem_hbm2", round(dev * 1e6, 1),
                      f"host64_vs_devmem={dev / ts[64]:.2f}x"))
+        shard = simulate(dataclasses.replace(
+            base, pcie_gb_s=64.0, tp=2, fabric="ring:64"))
+        rows.append((f"{model}.host64GBs.tp2_ring64",
+                     round(shard.total_s * 1e6, 1),
+                     f"vs_tp1={ts[64] / shard.total_s:.2f}x;"
+                     f"coll_share="
+                     f"{shard.buckets()['collective']:.4f}"))
     emit(rows, "fig12_interconnect")
 
 

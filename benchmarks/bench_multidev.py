@@ -1,0 +1,162 @@
+"""Multi-device sharded-plan pricing: the TP/EP-degree x fabric x
+memory-mode sweep behind the README table, plus the reduced-model gate
+numbers ``check_replay_trajectory.py`` re-measures host-normalized.
+
+Writes the usual CSV rows plus ``BENCH_multidev.json`` at the repo
+root.  The full-size sweeps price ONE rank's sharded plan per point —
+symmetric TP/EP ranks make the coupled barrier a no-op
+(``core.multidev.replay_multidev`` property), so single-plan pricing is
+exact for the whole group, and plans are shared across fabric
+bandwidths (a bandwidth point re-prices, never re-lowers).
+
+At these model scales collectives are almost fully hidden in existing
+pipeline slack (exact replay prices identical totals across link
+bandwidths), so cross-fabric deltas in the sampled rows sit inside the
+steady-state window approximation (~0.1%, occasionally inverted);
+read the fabric axis through coll_share, not total_us.
+
+    PYTHONPATH=src python benchmarks/bench_multidev.py
+"""
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.core import scenario as SC
+from repro.core.scenario import Scenario, simulate
+
+try:
+    from benchmarks.common import emit
+except ImportError:                    # run as a bare script
+    from common import emit
+
+JSON_PATH = Path("BENCH_multidev.json")
+MODES = ("DM", "DC", "DevMem")
+FABRICS = ("ring:16", "ring:64", "alltoall:64")
+
+# full-size sweep axes: TP degrees at the model's EP, EP degrees at
+# tp=1, one memory-mode sweep at the largest TP degree on ring:64
+SWEEPS = (
+    dict(model="deepseek-v3-671b", seq=32, sample_stride=16,
+         tp_degrees=(1, 2, 4, 8), ep=8, ep_degrees=(2, 4, 8)),
+    dict(model="qwen2-moe-a2.7b", seq=32, sample_stride=8,
+         tp_degrees=(1, 2, 4), ep=4, ep_degrees=(1, 2, 4)),
+)
+
+# reduced scenarios the CI trajectory gate re-prices (a 3-mode
+# compiled sweep each, best-of-2) — imported by
+# check_replay_trajectory.py so the gate and the artifact can never
+# disagree about what was measured
+GATE_SCENARIOS = (
+    dict(model="deepseek-v3-reduced", seq=64, tp=2, ep=2),
+    dict(model="deepseek-v3-reduced", seq=64, tp=4),
+    dict(model="qwen2-moe-a2.7b-reduced", seq=64, ep=4),
+    dict(model="qwen2-0.5b-reduced", seq=64, tp=2),
+)
+
+
+def _point(sc: Scenario) -> dict:
+    res = simulate(sc)
+    b = res.buckets()
+    return {"total_us": round(res.total_s * 1e6, 1),
+            "coll_share": round(float(b["collective"]), 4),
+            "transfer_share": round(float(b["transfer"]), 4),
+            "events": res.events_replayed,
+            "wall_s": round(res.wall_s, 4)}
+
+
+def run_sweep(spec: dict) -> dict:
+    base = Scenario(model=spec["model"], seq=spec["seq"],
+                    sample_stride=spec["sample_stride"],
+                    engine="compiled")
+    rows = []
+    for tp in spec["tp_degrees"]:
+        for fab in FABRICS:
+            sc = dataclasses.replace(base, tp=tp, ep=spec["ep"],
+                                     fabric=fab)
+            rows.append({"axis": "tp", "degree": tp, "ep": spec["ep"],
+                         "fabric": fab, "mode": "DC",
+                         **_point(sc)})
+    for ep in spec["ep_degrees"]:
+        for fab in FABRICS:
+            sc = dataclasses.replace(base, ep=ep, fabric=fab)
+            rows.append({"axis": "ep", "degree": ep, "ep": ep,
+                         "fabric": fab, "mode": "DC", **_point(sc)})
+    tp_max = spec["tp_degrees"][-1]
+    for mode in MODES:
+        sc = dataclasses.replace(base, tp=tp_max, ep=spec["ep"],
+                                 fabric="ring:64", mode=mode)
+        rows.append({"axis": "mode", "degree": tp_max,
+                     "ep": spec["ep"], "fabric": "ring:64",
+                     "mode": mode, **_point(sc)})
+    SC.clear_caches()                  # full-size plans are ~100 MB
+    return {"seq": spec["seq"], "sample_stride": spec["sample_stride"],
+            "rows": rows}
+
+
+def run_gate() -> dict:
+    """Throughput of the sharded pricing path on reduced models: each
+    gate scenario lowers once, then a 3-mode compiled sweep (first
+    mode pays the one-time trace analysis), best-of-2 overall.  Also
+    records the event engine's throughput on the same plans so the CI
+    checker can host-normalize against THIS artifact (the bert-derived
+    host factor would skew if this section is regenerated on a
+    different machine than BENCH_replay.json)."""
+    from repro.accesys.pipeline import replay
+    from repro.core.scenario import scenario_plan, system_for
+    scs = [Scenario(engine="compiled", **kw) for kw in GATE_SCENARIOS]
+    plans = []
+    events = 0
+    for sc in scs:
+        plan, _, ev, _ = scenario_plan(sc)
+        plans.append((sc, plan))
+        events += ev
+    wall = float("inf")
+    for _ in range(2):
+        for _, plan in plans:
+            plan.compile().memo.clear()
+        t0 = time.perf_counter()
+        for sc, plan in plans:
+            for mode in MODES:
+                replay(system_for(dataclasses.replace(sc, mode=mode)),
+                       plan, engine="compiled")
+        wall = min(wall, time.perf_counter() - t0)
+    ewall = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        for sc, plan in plans:
+            replay(system_for(dataclasses.replace(sc, mode="DC")),
+                   plan, engine="event")
+        ewall = min(ewall, time.perf_counter() - t0)
+    SC.clear_caches()
+    return {"scenarios": list(GATE_SCENARIOS), "events": events,
+            "wall_s": round(wall, 4),
+            "ev_per_s": round(3 * events / wall),
+            "event_ev_per_s": round(events / ewall)}
+
+
+def main():
+    report = {"schema": "multidev/v1", "modes": list(MODES),
+              "fabrics": list(FABRICS), "workloads": {}}
+    csv_rows = []
+    for spec in SWEEPS:
+        wl = run_sweep(spec)
+        report["workloads"][spec["model"]] = wl
+        for r in wl["rows"]:
+            csv_rows.append((
+                f"{spec['model']}.{r['axis']}{r['degree']}."
+                f"{r['fabric'].replace(':', '_')}.{r['mode']}",
+                r["total_us"],
+                f"coll_share={r['coll_share']};events={r['events']}"))
+    report["gate"] = run_gate()
+    csv_rows.append(("gate.reduced_sweep",
+                     round(report["gate"]["wall_s"] * 1e6, 1),
+                     f"ev_per_s={report['gate']['ev_per_s']};"
+                     f"events={report['gate']['events']}"))
+    emit(csv_rows, "multidev_sweep")
+    JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {JSON_PATH} ({len(csv_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,7 @@ from repro.core.scenario import Scenario, scenario_plan, system_for
 ARTIFACT = Path(__file__).resolve().parent.parent / "BENCH_replay.json"
 DS_ARTIFACT = ARTIFACT.parent / "BENCH_design_space.json"
 SERVE_ARTIFACT = ARTIFACT.parent / "BENCH_serving_scale.json"
+MD_ARTIFACT = ARTIFACT.parent / "BENCH_multidev.json"
 MODES = ("DM", "DC", "DevMem")
 
 # artifact key -> the Scenario bench_replay.py lowered it from (only
@@ -270,6 +271,64 @@ def main(argv=None) -> int:
                       ">2x vs BENCH_serving_scale.json")
                 return 1
             print("OK: templated serving build+price within threshold")
+
+    if args.workload == "bert-base.exact" and MD_ARTIFACT.exists():
+        # sharded-plan pricing: rebuild the reduced TP/EP gate
+        # scenarios bench_multidev.py measured (importing its
+        # GATE_SCENARIOS so the gate and artifact can't drift apart)
+        # and re-price the same 3-mode compiled sweeps, best-of-2,
+        # host-normalized against the committed BENCH_multidev.json
+        try:
+            from benchmarks.bench_multidev import GATE_SCENARIOS
+        except ImportError:                # run as a bare script
+            from bench_multidev import GATE_SCENARIOS
+
+        md = json.loads(MD_ARTIFACT.read_text())["gate"]
+        if list(md["scenarios"]) != [dict(kw) for kw in GATE_SCENARIOS]:
+            print("note: multidev gate scenarios changed since the "
+                  "artifact — comparing events/sec on the current set")
+        mplans = []
+        m_ev = 0
+        for kw in GATE_SCENARIOS:
+            msc = Scenario(engine="compiled", **kw)
+            mplan, _, mev, _ = scenario_plan(msc)
+            mplans.append((msc, mplan))
+            m_ev += mev
+        # self-calibrated host factor: the multidev gate records its
+        # own event-engine rate, so it normalizes correctly even when
+        # regenerated on a different host than BENCH_replay.json
+        t0 = time.perf_counter()
+        for msc, mplan in mplans:
+            replay(system_for(dataclasses.replace(msc, mode="DC")),
+                   mplan, engine="event")
+        md_host = md["event_ev_per_s"] / (m_ev
+                                          / (time.perf_counter() - t0))
+        mwall = float("inf")
+        for _ in range(2):             # best-of-2: shrug off CI noise
+            for _, mplan in mplans:
+                mplan.compile().memo.clear()
+            t0 = time.perf_counter()
+            for msc, mplan in mplans:
+                for mode in MODES:
+                    replay(system_for(dataclasses.replace(msc,
+                                                          mode=mode)),
+                           mplan, engine="compiled")
+            mwall = min(mwall, time.perf_counter() - t0)
+        got_mevs = 3 * m_ev / mwall
+        expect_mevs = md["ev_per_s"] / md_host
+        mratio = expect_mevs / max(got_mevs, 1e-9)
+        print(f"multidev sharded pricing: {m_ev} events over "
+              f"{len(mplans)} TP/EP plans, 3-mode compiled sweep "
+              f"{mwall:.3f}s -> {got_mevs:,.0f} ev/s (artifact "
+              f"{md['ev_per_s']:,.0f} ev/s, host factor "
+              f"{md_host:.2f}x -> expected {expect_mevs:,.0f} "
+              f"ev/s, slowdown {mratio:.2f}x, threshold "
+              f"{args.threshold:.1f}x)")
+        if mratio > args.threshold:
+            print("FAIL: sharded-plan pricing regressed "
+                  f">{args.threshold:.1f}x vs BENCH_multidev.json")
+            return 1
+        print("OK: sharded-plan pricing within threshold")
     return 0
 
 

@@ -304,6 +304,42 @@ class PCIeLink:
         return nbytes / self.effective_bw
 
 
+# -------------------------------------------------------------- fabric
+FABRIC_TOPOLOGIES = ("ring", "alltoall")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Inter-device interconnect for multi-device sharded plans: p
+    symmetric accelerators joined by dedicated PCIe-class links (one
+    per neighbour, separate from the host<->device streaming link), a
+    topology that decides how a collective decomposes into per-hop
+    transfers at plan-build time (``core.multidev``), and a per-hop
+    launch latency.  Timing reuses the PCIeLink model verbatim: one
+    collective hop of B bytes costs ``hop_time(B)`` on the rank's own
+    fabric lane."""
+    link: PCIeLink = PCIeLink()
+    topology: str = "ring"          # ring | alltoall
+    hop_latency_ns: float = 500.0   # per-hop launch/sync latency
+
+    def __post_init__(self):
+        if self.topology not in FABRIC_TOPOLOGIES:
+            raise ValueError(
+                f"unknown fabric topology {self.topology!r}; valid: "
+                f"{FABRIC_TOPOLOGIES}")
+
+    def hop_time(self, nbytes) -> float:
+        """One inter-device hop: link serialization + launch latency
+        (vectorizes over an nbytes array, like the replayer's paths)."""
+        return nbytes / self.link.effective_bw \
+            + self.hop_latency_ns * 1e-9
+
+    def row_key(self) -> tuple:
+        """The pricing-relevant identity (topology acts at plan build,
+        not at pricing) — part of the batched replayer's row dedup."""
+        return ("fab", self.link.effective_bw, self.hop_latency_ns)
+
+
 # ---------------------------------------------------------------- DRAM
 # Table 7: tech -> (channels, data_width_bits, bandwidth B/s, data rate)
 DRAM_TECH = {

@@ -25,9 +25,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.accesys.components import (DMAEngine, DRAM, LLC, LRUStreamState,
-                                      PCIeLink, SMMU, SystolicArray,
-                                      _lru_trace_memo)
+from repro.accesys.components import (DMAEngine, DRAM, Fabric, LLC,
+                                      LRUStreamState, PCIeLink, SMMU,
+                                      SystolicArray, _lru_trace_memo)
 from repro.core import plan as P
 from repro.core import streaming
 
@@ -56,6 +56,7 @@ class GemmResult:
     macs: int
     host_s: float = 0.0          # host-side op time (composed plans)
     drain_s: float = 0.0         # DMA-out tail not hidden by compute
+    coll_s: float = 0.0          # inter-device collective time (multidev)
 
     @property
     def translation_overhead(self) -> float:
@@ -73,7 +74,8 @@ class GemmResult:
                 "transfer": self.exposed_transfer_s / t,
                 "compute": self.compute_s / t,
                 "drain": self.drain_s / t,
-                "host": self.host_s / t}
+                "host": self.host_s / t,
+                "collective": self.coll_s / t}
 
 
 # keep the historical name but make the generality explicit
@@ -88,6 +90,7 @@ class SystemConfig:
     dma: DMAEngine = dataclasses.field(default_factory=DMAEngine)
     smmu: SMMU = dataclasses.field(default_factory=SMMU)
     llc: LLC = dataclasses.field(default_factory=LLC)
+    fabric: Fabric = dataclasses.field(default_factory=Fabric)
     mode: str = "DC"                   # DM | DC | DevMem
     page_bytes: int = 4096
 
@@ -121,6 +124,7 @@ class _Trace:
     desc_s: float = 0.0
     trans_s: float = 0.0
     host_s: float = 0.0
+    coll_s: float = 0.0
 
     @property
     def makespan(self) -> float:
@@ -189,6 +193,15 @@ def _replay_events(cfg: SystemConfig, events, footprint_pages: int,
             th = ev.meta["elems"] * host_s_per_elem
             tr.t_sa_free = max(tr.t_sa_free, tr.t_out_free) + th
             tr.host_s += th
+        elif ev.kind is P.EventKind.COLLECTIVE:
+            # inter-device exchange hop: a barrier on this rank's
+            # timeline priced on the dedicated fabric link — no page
+            # traffic on the host<->device path, and pending fetches
+            # of the NEXT op keep prefetching underneath it (they
+            # drain at that op, exactly as across a DMA_OUT)
+            tc = cfg.fabric.hop_time(ev.nbytes)
+            tr.t_sa_free = max(tr.t_sa_free, tr.t_out_free) + tc
+            tr.coll_s += tc
         else:                       # DMA_OUT
             tc, xc = cfg.path_time(ev.nbytes, ev.page, footprint_pages)
             tr.desc_s += cfg.dma.descriptor_time()
@@ -218,7 +231,8 @@ def _result(cfg: SystemConfig, tr: _Trace, macs: int, n_calls: int,
         ptw_walks=int(cfg.smmu.walks * scale),
         macs=macs,
         host_s=tr.host_s * scale,
-        drain_s=max(0.0, tr.t_out_free - tr.t_sa_free) * scale)
+        drain_s=max(0.0, tr.t_out_free - tr.t_sa_free) * scale,
+        coll_s=tr.coll_s * scale)
 
 
 def _use_compiled(engine: Optional[str], n_events: int,
@@ -285,13 +299,13 @@ def _schedule_passes(unit_ctrl, segments, seg_delta,
     passes (per-key SMMU/LLC reset: in the exact replay every repeat
     owns fresh pages, so key reuse across passes would fake translation
     hits).  ``seg_delta(pass_no, si, pl)`` yields a segment's unscaled
-    deltas for the 11 accumulated quantities (total, compute, transfer,
-    exposed, desc, trans, host, drain, lookups, misses, walks) — each a
-    scalar, or a per-config array when ``zero`` is one.  ``unit_ctrl``
-    is the per-call doorbell+IRQ time.  Returns (accumulators, control,
-    macs)."""
+    deltas for the 12 accumulated quantities (total, compute, transfer,
+    exposed, desc, trans, host, coll, drain, lookups, misses, walks) —
+    each a scalar, or a per-config array when ``zero`` is one.
+    ``unit_ctrl`` is the per-call doorbell+IRQ time.  Returns
+    (accumulators, control, macs)."""
     multi = any(rep > 1 for _, rep in segments)
-    acc = [zero] * 11
+    acc = [zero] * 12
     control = zero
     macs = 0
     for pass_no in range(2 if multi else 1):
@@ -310,14 +324,14 @@ def _schedule_passes(unit_ctrl, segments, seg_delta,
 
 
 def _passes_result(acc, control, macs: int) -> GemmResult:
-    (total, compute, transfer, exposed, desc, trans, host, drain,
-     lookups, misses, walks) = acc
+    (total, compute, transfer, exposed, desc, trans, host, coll,
+     drain, lookups, misses, walks) = acc
     return GemmResult(
         total_s=total + control, compute_s=compute, transfer_s=transfer,
         exposed_transfer_s=exposed, descriptor_s=desc,
         translation_s=trans, tlb_lookups=int(lookups),
         tlb_misses=int(misses), ptw_walks=int(walks), macs=macs,
-        host_s=host, drain_s=max(0.0, drain))
+        host_s=host, drain_s=max(0.0, drain), coll_s=coll)
 
 
 def replay_schedule(cfg: SystemConfig, sched: P.PlanSchedule,
@@ -346,12 +360,13 @@ def replay_schedule(cfg: SystemConfig, sched: P.PlanSchedule,
             cfg.smmu.walks
         m0, c0, x0, e0 = tr.makespan, tr.compute_s, tr.transfer_s, \
             tr.exposed_s
-        d0, tn0, h0 = tr.desc_s, tr.trans_s, tr.host_s
+        d0, tn0, h0, cl0 = tr.desc_s, tr.trans_s, tr.host_s, tr.coll_s
         dr0 = max(0.0, tr.t_out_free - tr.t_sa_free)
         _replay_events(cfg, pl.events, foot, host_s_per_elem, tr)
         return (tr.makespan - m0, tr.compute_s - c0,
                 tr.transfer_s - x0, tr.exposed_s - e0,
                 tr.desc_s - d0, tr.trans_s - tn0, tr.host_s - h0,
+                tr.coll_s - cl0,
                 max(0.0, tr.t_out_free - tr.t_sa_free) - dr0,
                 cfg.smmu.lookups - lk0, cfg.smmu.misses - ms0,
                 cfg.smmu.walks - wk0)
@@ -524,13 +539,16 @@ def _group_reduce(cfg: SystemConfig, cp, t: np.ndarray, x: np.ndarray,
 
 def _op_amounts_base(cfg: SystemConfig, cp,
                      host_s_per_elem: float) -> np.ndarray:
-    """SA tile + host op amounts — depend only on the SA variant (the
-    host term is config-independent)."""
+    """SA tile + host + collective op amounts — depend only on the SA
+    variant and the fabric (the host term is config-independent)."""
     k = cp.op_kind
     val = np.where(k == P.OP_SA,
                    cfg.sa.passes * (cp.op_val + 2 * (cfg.sa.w - 1))
                    / cfg.sa.freq, 0.0)
-    return np.where(k == P.OP_HOST, cp.op_val * host_s_per_elem, val)
+    val = np.where(k == P.OP_HOST, cp.op_val * host_s_per_elem, val)
+    return np.where(k == P.OP_COLL,
+                    cp.op_val / cfg.fabric.link.effective_bw
+                    + cfg.fabric.hop_latency_ns * 1e-9, val)
 
 
 def _op_amounts(cfg: SystemConfig, cp, tc: np.ndarray,
@@ -563,7 +581,7 @@ def _run_ops_loop(opk, has_p, ready, val, t_sa, t_out):
                 if r > t_sa:
                     exp_a[g] = r - t_sa
                     t_sa = r
-            if k == P.OP_HOST:
+            if k == P.OP_HOST or k == P.OP_COLL:
                 if t_out > t_sa:
                     t_sa = t_out
             if k != P.OP_TAIL:
@@ -574,16 +592,17 @@ def _run_ops_loop(opk, has_p, ready, val, t_sa, t_out):
 
 
 def _run_ops_vec(opk, has_p, ready, val, t_sa, t_out):
-    """Vectorized recurrence: host ops and stream drains are the only
-    points where the SA timeline reads the DMA-out timeline, so the op
-    stream splits into segments that reduce to cumulative sums plus
-    running maxima (the max-plus closed form of the double-buffer
+    """Vectorized recurrence: host/collective ops and stream drains are
+    the only points where the SA timeline reads the DMA-out timeline, so
+    the op stream splits into segments that reduce to cumulative sums
+    plus running maxima (the max-plus closed form of the double-buffer
     recurrence)."""
     n = opk.size
     tsa_a = np.empty(n)
     tout_a = np.empty(n)
     exp_a = np.zeros(n)
-    barrier = np.nonzero((opk == P.OP_HOST) | (opk == P.OP_TAIL))[0]
+    barrier = np.nonzero((opk == P.OP_HOST) | (opk == P.OP_COLL)
+                         | (opk == P.OP_TAIL))[0]
     starts = np.concatenate([[0], barrier + 1])
     ends = np.concatenate([barrier, [n]])
     for s0, s1 in zip(starts, ends):
@@ -633,7 +652,7 @@ def _run_ops_vec(opk, has_p, ready, val, t_sa, t_out):
                 if r > t_sa:
                     exp_a[g] = r - t_sa
                     t_sa = r
-            if opk[g] == P.OP_HOST:
+            if opk[g] == P.OP_HOST or opk[g] == P.OP_COLL:
                 if t_out > t_sa:
                     t_sa = t_out
                 t_sa += val[g]
@@ -687,7 +706,8 @@ def replay_compiled(cfg: SystemConfig, plan,
         desc_s=float(d[has_p].sum())
         + float((k == P.OP_OUT).sum()) * cfg.dma.descriptor_time(),
         trans_s=float(x.sum()),
-        host_s=float(val[k == P.OP_HOST].sum()))
+        host_s=float(val[k == P.OP_HOST].sum()),
+        coll_s=float(val[k == P.OP_COLL].sum()))
     scale = plan.total_steps / max(plan.sampled_steps, 1) \
         if plan.total_steps else 1.0
     return _result(cfg, tr, plan.macs, plan.n_calls, scale)
@@ -739,6 +759,7 @@ def replay_schedule_compiled(cfg: SystemConfig, sched: P.PlanSchedule,
 
     comp_c = cum_at(np.where(k == P.OP_SA, val, 0.0), cp.seg_op)
     host_c = cum_at(np.where(k == P.OP_HOST, val, 0.0), cp.seg_op)
+    coll_c = cum_at(np.where(k == P.OP_COLL, val, 0.0), cp.seg_op)
     desc_c = cum_at(np.where(has_p, d, 0.0)
                     + np.where(k == P.OP_OUT,
                                cfg.dma.descriptor_time(), 0.0),
@@ -770,6 +791,7 @@ def replay_schedule_compiled(cfg: SystemConfig, sched: P.PlanSchedule,
                 desc_c[si + 1] - desc_c[si],
                 trans_c[si + 1] - trans_c[si],
                 host_c[si + 1] - host_c[si],
+                coll_c[si + 1] - coll_c[si],
                 drain_s_snap[tb + 1] - drain_s_snap[tb],
                 look_c[si + 1] - look_c[si],
                 miss_c[si + 1] - miss_c[si],
@@ -886,11 +908,17 @@ def _sa_row_key(sa: SystolicArray) -> tuple:
     return ("sa", sa.dtype, sa.w, sa.tile_w)
 
 
+def _amount_row_key(cfg: SystemConfig) -> tuple:
+    """Key of the SA/host/collective op-amount row: the SA variant plus
+    the fabric (collective hops price on the fabric link)."""
+    return (_sa_row_key(cfg.sa), cfg.fabric.row_key())
+
+
 def _price_key(cfg: SystemConfig, foot: int) -> tuple:
     """Configs with equal keys produce identical results for any plan —
     the batch replays one representative per key."""
     return (_smmu_row_key(cfg.smmu, foot), _path_row_key(cfg),
-            _dma_row_key(cfg.dma), _sa_row_key(cfg.sa),
+            _dma_row_key(cfg.dma), _amount_row_key(cfg),
             cfg.dma.doorbell_ns, cfg.dma.interrupt_ns)
 
 
@@ -1030,7 +1058,7 @@ def _batch_rows(cfgs, cp, foot: int, host_s_per_elem: float,
                     ready_carry[gk] = float(ready[-1])
             grows[gk] = (hp, d, srows[sk], ready, prows[pk][2])
         has_p, d, _, ready, _ = grows[gk]
-        ak = _sa_row_key(cfg.sa)
+        ak = _amount_row_key(cfg)
         vk = (ak, pk)
         if ak not in brows:
             brows[ak] = _op_amounts_base(cfg, cp, host_s_per_elem)
@@ -1058,7 +1086,8 @@ def _run_ops_vec_batch(opk, has_p, ready, val, t_sa, t_out):
     exp_a = np.zeros((B, n))
     t_sa = np.asarray(t_sa, np.float64).copy()
     t_out = np.asarray(t_out, np.float64).copy()
-    barrier = np.nonzero((opk == P.OP_HOST) | (opk == P.OP_TAIL))[0]
+    barrier = np.nonzero((opk == P.OP_HOST) | (opk == P.OP_COLL)
+                         | (opk == P.OP_TAIL))[0]
     starts = np.concatenate([[0], barrier + 1])
     ends = np.concatenate([barrier, [n]])
     for s0, s1 in zip(starts, ends):
@@ -1114,7 +1143,7 @@ def _run_ops_vec_batch(opk, has_p, ready, val, t_sa, t_out):
                 m = r > t_sa
                 exp_a[m, g] = (r - t_sa)[m]
                 t_sa = np.where(m, r, t_sa)
-            if opk[g] == P.OP_HOST:
+            if opk[g] == P.OP_HOST or opk[g] == P.OP_COLL:
                 t_sa = np.maximum(t_sa, t_out) + val[:, g]
             tsa_a[:, g] = t_sa
             tout_a[:, g] = t_out
@@ -1226,6 +1255,7 @@ def _stream_chunk(cfgs, cp, batch, foot: int, host_s_per_elem: float,
                 (("d", r.gk), r.d[r.has_p]),
                 (("x", r.sk), r.x),
                 (("h",), r.base[k == P.OP_HOST]),
+                (("l", r.vk[0]), r.base[k == P.OP_COLL]),
                 (("e", tkey), exp_a[tl_idx[tkey]])):
             if key not in done:
                 done.add(key)
@@ -1259,7 +1289,7 @@ def _stream_results(cfgs, st: _TraceStream, foot: int):
         sk = _smmu_row_key(cfg.smmu, foot)
         pk = _path_row_key(cfg)
         gk = (sk, pk, _dma_row_key(cfg.dma))
-        vk = (_sa_row_key(cfg.sa), pk)
+        vk = (_amount_row_key(cfg), pk)
         tkey = (gk, vk)
         tsa_f, tout_f, _ = st.tl[tkey]
         lk, ms, wk = st.stats[sk]
@@ -1276,7 +1306,8 @@ def _stream_results(cfgs, st: _TraceStream, foot: int):
             tlb_lookups=lk, tlb_misses=ms, ptw_walks=wk,
             macs=st.macs,
             host_s=st.chain[("h",)],
-            drain_s=max(0.0, tout_f - tsa_f)))
+            drain_s=max(0.0, tout_f - tsa_f),
+            coll_s=st.chain[("l", vk[0])]))
         pers.append(per_all[tl_pos[tkey]] + n_calls * ctrl_unit)
     return results, pers
 
@@ -1369,7 +1400,7 @@ def _segment_bundle(cp):
     b = cp.memo.get("segb")
     if b is None:
         opk = cp.op_kind
-        barrier = np.nonzero((opk == P.OP_HOST) |
+        barrier = np.nonzero((opk == P.OP_HOST) | (opk == P.OP_COLL) |
                              (opk == P.OP_TAIL))[0]
         starts = np.concatenate([[0], barrier + 1])
         ends = np.concatenate([barrier, [opk.size]])
@@ -1385,7 +1416,8 @@ def _segment_bundle(cp):
              np.searchsorted(out_all, starts).tolist(),
              np.searchsorted(out_all, ends).tolist(),
              np.maximum(idx_rel, 0), idx_rel < 0,
-             (opk[barrier] == P.OP_HOST).tolist())
+             ((opk[barrier] == P.OP_HOST) |
+              (opk[barrier] == P.OP_COLL)).tolist())
         cp.memo["segb"] = b
     return b
 
@@ -1479,8 +1511,10 @@ def _run_ops_vec_batch_sums(cp, has_p, ready_rows, base_rows,
         np.subtract(readys_sa[ir[j], 1:], pre_full[ia[j], :-1],
                     out=q_all[j, 1:])
         q_all[j, sa_starts] = readys_sa[ir[j], sa_starts]
-    # barrier-op amounts are SA/path independent (host time or zero)
-    bar_val = base_rows[0][barrier].tolist()
+    # barrier-op amounts are path independent but DO vary with the
+    # amount row (collective hops price per fabric): expand per
+    # timeline row via the base index map
+    bar_val = np.stack([b[barrier] for b in base_rows])[ia]
     readys_bar = np.stack([r[barrier] for r in ready_rows])[ir]
     hp_bar = has_p[barrier].tolist()
     t_sa = np.zeros(B)
@@ -1546,7 +1580,7 @@ def _run_ops_vec_batch_sums(cp, has_p, ready_rows, base_rows,
                 exp_sum += np.where(m, r - t_sa, 0.0)
                 t_sa = np.where(m, r, t_sa)
             if bar_host[i]:
-                t_sa = np.maximum(t_sa, t_out) + bar_val[i]
+                t_sa = np.maximum(t_sa, t_out) + bar_val[:, i]
     return exp_sum, t_sa, t_out
 
 
@@ -1645,7 +1679,9 @@ def _plan_batch_results(cfgs, rows, plan, cp, max_chunk_elems):
             tlb_lookups=int(lk * scale), tlb_misses=int(ms * scale),
             ptw_walks=int(wk * scale), macs=plan.macs,
             host_s=row_sum(("h",), r.base, k == P.OP_HOST) * scale,
-            drain_s=max(0.0, tout_f - tsa_f) * scale))
+            drain_s=max(0.0, tout_f - tsa_f) * scale,
+            coll_s=row_sum(("l", r.vk[0]), r.base,
+                           k == P.OP_COLL) * scale))
     return results
 
 
@@ -1716,6 +1752,8 @@ def _schedule_batch_results(cfgs, rows, sched, cp, max_chunk_elems):
             np.where(k == P.OP_SA, r.val, 0.0), cp.seg_op))
         host_c = row_cum(("h", r.vk), lambda: cum_at(
             np.where(k == P.OP_HOST, r.val, 0.0), cp.seg_op))
+        coll_c = row_cum(("l", r.vk), lambda: cum_at(
+            np.where(k == P.OP_COLL, r.val, 0.0), cp.seg_op))
         desc_c = row_cum(("d", r.gk), lambda: cum_at(
             np.where(r.has_p, r.d, 0.0)
             + np.where(k == P.OP_OUT, cfg.dma.descriptor_time(), 0.0),
@@ -1743,6 +1781,7 @@ def _schedule_batch_results(cfgs, rows, sched, cp, max_chunk_elems):
                     desc_c[si + 1] - desc_c[si],
                     trans_c[si + 1] - trans_c[si],
                     host_c[si + 1] - host_c[si],
+                    coll_c[si + 1] - coll_c[si],
                     drain_snap[tb + 1] - drain_snap[tb],
                     look_c[si + 1] - look_c[si],
                     miss_c[si + 1] - miss_c[si],

@@ -67,6 +67,7 @@ class EventKind(enum.Enum):
     DMA_IN = "DMA_IN"
     COMPUTE = "COMPUTE"
     DMA_OUT = "DMA_OUT"
+    COLLECTIVE = "COLLECTIVE"      # inter-device exchange hop (multidev)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,19 +154,26 @@ class StreamPlan:
         """Event statistics (page loads per tensor, computes, stores)."""
         loads: dict = {}
         stores: dict = {}
-        sa = host = 0
+        sa = host = coll = coll_bytes = 0
         for ev in self.events:
             if ev.kind is EventKind.DMA_IN:
                 loads[ev.page[0]] = loads.get(ev.page[0], 0) + 1
             elif ev.kind is EventKind.DMA_OUT:
                 stores[ev.page[0]] = stores.get(ev.page[0], 0) + 1
+            elif ev.kind is EventKind.COLLECTIVE:
+                coll += 1
+                coll_bytes += ev.nbytes
             elif ev.unit == "sa":
                 sa += 1
             else:
                 host += 1
-        return {"dma_in": loads, "dma_out": stores,
-                "sa_computes": sa, "host_computes": host,
-                "n_events": len(self.events)}
+        out = {"dma_in": loads, "dma_out": stores,
+               "sa_computes": sa, "host_computes": host,
+               "n_events": len(self.events)}
+        if coll:
+            out["collectives"] = coll
+            out["collective_bytes"] = coll_bytes
+        return out
 
     def validate(self) -> None:
         """Events must be topologically ordered with in-plan deps."""
@@ -189,7 +197,7 @@ class StreamPlan:
 
 
 # ------------------------------------------------- compiled (array) form
-OP_SA, OP_HOST, OP_OUT, OP_TAIL = 1, 2, 3, 4
+OP_SA, OP_HOST, OP_OUT, OP_TAIL, OP_COLL = 1, 2, 3, 4, 5
 
 
 @dataclasses.dataclass
@@ -305,6 +313,16 @@ def _compile_events(streams: Sequence[list], intern: dict = None,
                 glanes = set()
                 consumed = len(in_lane)
                 gend.append(consumed)
+            elif k is EventKind.COLLECTIVE:
+                # one inter-device exchange hop: no page traffic on the
+                # host<->device path (the fabric owns dedicated links),
+                # just a fabric-priced barrier op on the timeline —
+                # pending fetches of the NEXT op keep prefetching
+                # underneath it, exactly like a DMA_OUT drain
+                opk.append(OP_COLL)
+                opv.append(float(ev.nbytes))
+                gend.append(consumed)
+                nl.append(0)
             else:                                  # DMA_OUT
                 pid = intern.get(ev.page)
                 if pid is None:
@@ -477,7 +495,7 @@ def trace_footprint(plans) -> int:
             seen.update(keys)
             continue
         for ev in p.events:
-            if ev.kind is not EventKind.COMPUTE:
+            if ev.kind is not EventKind.COMPUTE and ev.page is not None:
                 seen.add(ev.page)
     return len(seen)
 
@@ -1033,6 +1051,27 @@ def host_plan(op: str, inputs: Sequence[str], output: Optional[str],
         tensors[name_] = TensorSpec(shape[0], shape[1], set(), out_kind)
     return StreamPlan(f"host.{op}", np_dtype_for(dtype), page_bytes,
                       [ev], tensors)
+
+
+# ---------------------------------------------------------- collectives
+def collective_plan(op: str, hop_bytes: Sequence[int], dtype,
+                    page_bytes: int = paging.PAGE_BYTES, *,
+                    lane: int = 0, meta: Optional[dict] = None,
+                    name: Optional[str] = None) -> StreamPlan:
+    """One rank's share of an inter-device collective as a chain of
+    per-hop COLLECTIVE events (ring all-gather: p-1 hops of B/p bytes
+    each; all-to-all over a full crossbar: p-1 peer transfers; ...).
+    The TOPOLOGY decides the hop decomposition at plan-build time —
+    ``core.multidev`` owns those builders — so the replayer prices each
+    hop as one transfer on the rank's dedicated fabric link, with no
+    page traffic on the host<->device path.  ``lane`` tags the fabric
+    link the hops ride (rank-tagged collective lanes)."""
+    events = [Event(i, EventKind.COLLECTIVE, nbytes=int(nb),
+                    deps=(i - 1,) if i else (), lane=lane, op=op,
+                    unit="link", meta={"hop": i, **(meta or {})})
+              for i, nb in enumerate(hop_bytes)]
+    return StreamPlan(name or f"coll.{op}", np_dtype_for(dtype),
+                      page_bytes, events, {})
 
 
 # ----------------------------------------------------------- attention

@@ -40,6 +40,7 @@ import time
 from collections import OrderedDict
 from typing import Callable, Optional, Sequence
 
+from repro.core import multidev as MD
 from repro.core import paging
 from repro.core import plan as plan_ir
 from repro.core.plan import (PlanSchedule, StreamPlan, concat, gemm_plan,
@@ -94,6 +95,10 @@ class Scenario:
     devmem_dram: str = "HBM2"      # DRAM tech for DevMem mode
     page_bytes: int = PAGE_BYTES   # streaming page/tile granularity
     params: tuple = ()             # workload-class overrides (as_params)
+    tp: int = 1                    # tensor-parallel degree (model axis)
+    ep: int = 1                    # expert-parallel degree (MoE only)
+    fabric: str = "ring"           # interconnect "topo[:GB/s[:hop_ns]]"
+    pcie_gb_s: Optional[float] = None  # host-link bandwidth override
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -115,6 +120,18 @@ class Scenario:
         if self.engine not in ENGINES:
             raise UnsupportedScenario(
                 f"unknown engine {self.engine!r}; valid: {ENGINES}")
+        for deg, nm in ((self.tp, "tp"), (self.ep, "ep")):
+            if not isinstance(deg, int) or deg < 1:
+                raise UnsupportedScenario(
+                    f"{nm} must be an int >= 1, got {deg!r}")
+        try:
+            MD.parse_fabric(self.fabric)
+        except (TypeError, ValueError) as e:
+            raise UnsupportedScenario(
+                f"bad fabric spec {self.fabric!r}: {e}") from None
+        if self.pcie_gb_s is not None and not self.pcie_gb_s > 0:
+            raise UnsupportedScenario(
+                f"pcie_gb_s must be positive, got {self.pcie_gb_s!r}")
 
     def param_dict(self) -> dict:
         return dict(self.params)
@@ -215,6 +232,28 @@ def _norm_plan(src: str, out: str, S: int, d: int, dt, norm: str,
                      out_kind=out_kind)
 
 
+@dataclasses.dataclass(frozen=True)
+class _Shard:
+    """The sharding context a config stack lowers under — one RANK's
+    view of a tp/ep-partitioned model.  Set (and restored) around
+    ``_build_plan`` for config scenarios; the layer builders read it to
+    shrink head/ffn/expert extents per ``sharding.logical``'s rule
+    table and to insert the Megatron-style collectives (all-gather of
+    the block input, reduce-scatter of the block output, all-to-all
+    around MoE dispatch/combine).  ``tp == ep == 1`` is the identity:
+    every builder takes the exact unsharded code path, so a degree-1
+    "sharded" plan is bitwise the unsharded plan.  Because symmetric
+    ranks never bind ``replay_multidev``'s barrier, pricing ONE rank's
+    plan through the ordinary single-plan engines is exact for the
+    whole homogeneous TP/EP group."""
+    tp: int = 1
+    ep: int = 1
+    topology: str = "ring"
+
+
+_SHARD = _Shard()
+
+
 def _attn_plans(cfg, S: int, dt, P: str, x: str, out: str, ss: int,
                 pb: int, *, kv_src: Optional[str] = None,
                 S_kv: Optional[int] = None) -> list:
@@ -225,10 +264,34 @@ def _attn_plans(cfg, S: int, dt, P: str, x: str, out: str, ss: int,
     keys/values from the ``kv_src`` memory tensor of ``S_kv`` rows."""
     hd = cfg.resolved_head_dim
     HQ, KH = cfg.n_heads, cfg.n_kv_heads
+    tp, topo = _SHARD.tp, _SHARD.topology
+    if tp > 1:
+        # shard iff spec_for's rule table would: q heads must divide;
+        # kv heads shard with them or stay replicated (MQA/GQA) when
+        # the local q heads still group evenly over the full KV set
+        HQ_l = MD.tp_split(HQ, "heads", tp)
+        KH_l = MD.tp_split(KH, "kv_heads", tp)
+        if HQ_l is None:
+            tp = 1                     # replicate the whole block
+        elif KH_l is not None:
+            HQ, KH = HQ_l, KH_l
+        elif HQ_l % KH == 0:
+            HQ = HQ_l                  # shard q heads, replicate KV
+        else:
+            tp = 1
     group = HQ // KH
     Sk = S if S_kv is None else S_kv
     d = cfg.d_model
     plans: list = []
+    if tp > 1:
+        # Megatron cut: ranks hold S/tp rows of x — all-gather the
+        # block input before the projections, reduce-scatter the
+        # partial output projection before the residual add
+        shard = S * d * plan_ir.ELEM_BYTES[dt] // tp
+        ag = MD.ag_plan(shard, tp, topo, dt, page_bytes=pb,
+                        name=P + f"ag.p{tp}")
+        if ag is not None:
+            plans.append(ag)
     mla = getattr(cfg, "mla", None) if kv_src is None else None
     if mla is not None:
         q_hd = mla.qk_nope_head_dim + mla.qk_rope_head_dim
@@ -242,8 +305,16 @@ def _attn_plans(cfg, S: int, dt, P: str, x: str, out: str, ss: int,
                       b=P + "wq_b", c=P + "q", b_kind="weight",
                       c_kind="intermediate", page_bytes=pb,
                       sample_stride=ss),
-            gemm_plan(S, mla.kv_lora_rank + mla.qk_rope_head_dim, d, dt,
+            # the joint down-projection splits into its two outputs —
+            # the compressed KV latent (consumed by wk_b/wv_b) and the
+            # shared rope key (concatenated into k directly) — so
+            # kv_lat's declared shape matches what its consumers read
+            gemm_plan(S, mla.kv_lora_rank, d, dt,
                       a=x, b=P + "wkv_a", c=P + "kv_lat",
+                      b_kind="weight", c_kind="intermediate",
+                      page_bytes=pb, sample_stride=ss),
+            gemm_plan(S, mla.qk_rope_head_dim, d, dt,
+                      a=x, b=P + "wk_rope", c=P + "k_rope",
                       b_kind="weight", c_kind="intermediate",
                       page_bytes=pb, sample_stride=ss),
             gemm_plan(Sk, KH * q_hd, mla.kv_lora_rank, dt,
@@ -322,6 +393,13 @@ def _attn_plans(cfg, S: int, dt, P: str, x: str, out: str, ss: int,
         gemm_plan(S, d, HQ * v_hd, dt, a=P + "attn", b=P + "wo",
                   c=P + "proj", b_kind="weight", c_kind="intermediate",
                   page_bytes=pb, sample_stride=ss),
+    ]
+    if tp > 1:
+        rs = MD.rs_plan(S * d * plan_ir.ELEM_BYTES[dt] // tp, tp, topo,
+                        dt, page_bytes=pb, name=P + f"rs.p{tp}")
+        if rs is not None:
+            plans.append(rs)
+    plans += [
         host_plan("add", (x, P + "proj"), P + "res_a", (S, d),
                   S * d, dt, pb),
         _norm_plan(P + "res_a", out, S, d, dt, cfg.norm, pb),
@@ -336,7 +414,20 @@ def _mlp_body(cfg, S: int, d_ff: int, dt, P: str, x: str, out: str,
     the per-layer FFN and MoE shared-expert branches so their plan
     accounting can never diverge."""
     d = cfg.d_model
+    tp, topo = _SHARD.tp, _SHARD.topology
+    if tp > 1:
+        d_ff_l = MD.tp_split(d_ff, "mlp", tp)
+        if d_ff_l is None:
+            tp = 1                     # indivisible width: replicate
+        else:
+            d_ff = d_ff_l
     plans: list = []
+    if tp > 1:
+        shard = S * d * plan_ir.ELEM_BYTES[dt] // tp
+        ag = MD.ag_plan(shard, tp, topo, dt, page_bytes=pb,
+                        name=P + f"ag.p{tp}")
+        if ag is not None:
+            plans.append(ag)
     if cfg.glu:
         plans += [
             gemm_plan(S, d_ff, d, dt, a=x, b=P + "w1", c=P + "gate",
@@ -361,6 +452,11 @@ def _mlp_body(cfg, S: int, d_ff: int, dt, P: str, x: str, out: str,
         gemm_plan(S, d, d_ff, dt, a=P + "h", b=P + "w2", c=out,
                   b_kind="weight", c_kind="intermediate",
                   page_bytes=pb, sample_stride=ss))
+    if tp > 1:
+        rs = MD.rs_plan(S * d * plan_ir.ELEM_BYTES[dt] // tp, tp, topo,
+                        dt, page_bytes=pb, name=P + f"rs.p{tp}")
+        if rs is not None:
+            plans.append(rs)
     return plans
 
 
@@ -395,10 +491,41 @@ def _moe_layer(cfg, S, dt, ss, pb):
         P = f"moe{idx}."
         plans = _attn_plans(cfg, S, dt, P, x, P + "ln_a", ss, pb)
         moe_out = P + "moe_y" if mo.n_shared_experts else P + "ff"
-        plans += plan_ir._moe_layer_plans(
-            S, cfg.d_model, mo.n_routed_experts, mo.top_k,
-            mo.d_ff_expert, dt, act=cfg.act, x=P + "ln_a", layer=idx,
-            out=moe_out, page_bytes=pb, sample_stride=ss)
+        ep, topo = _SHARD.ep, _SHARD.topology
+        E_local = mo.n_routed_experts
+        capacity = None
+        if ep > 1:
+            from repro.models.moe import routed_capacity
+            # each rank hosts E/ep experts but keeps the GLOBAL
+            # per-expert capacity (dispatch rebalances tokens across
+            # ranks, it does not shrink an expert's buffer)
+            E_local = MD.ep_shard_plan(ep, mo.n_routed_experts)
+            capacity = routed_capacity(S * mo.top_k,
+                                       mo.n_routed_experts, None, 1.25)
+        mp = plan_ir._moe_layer_plans(
+            S, cfg.d_model, E_local, mo.top_k,
+            mo.d_ff_expert, dt, capacity=capacity, act=cfg.act,
+            x=P + "ln_a", layer=idx, out=moe_out, page_bytes=pb,
+            sample_stride=ss)
+        if ep > 1:
+            # a2a dispatch rides between host dispatch and the expert
+            # GEMMs; combine between the last expert and host combine.
+            # Each rank exchanges its (p-1)/p share of the routed
+            # token block — dispatch and combine volumes are equal.
+            shard = S * mo.top_k * cfg.d_model * \
+                plan_ir.ELEM_BYTES[dt] // ep
+            colls = [MD.a2a_plan(shard, ep, topo, dt,
+                                 op="a2a_dispatch", page_bytes=pb,
+                                 name=P + f"a2a_d.p{ep}"),
+                     MD.a2a_plan(shard, ep, topo, dt,
+                                 op="a2a_combine", page_bytes=pb,
+                                 name=P + f"a2a_c.p{ep}")]
+            disp, comb = colls
+            if disp is not None:
+                mp = mp[:2] + [disp] + mp[2:]
+            if comb is not None:
+                mp = mp[:-1] + [comb, mp[-1]]
+        plans += mp
         if mo.n_shared_experts:
             # the always-on shared-expert branch: one dense gated FFN
             # of width n_shared * d_ff_expert over every token —
@@ -736,9 +863,14 @@ def _cache_put(cache: OrderedDict, maxsize: int, key, value):
 
 def _plan_key(sc: Scenario) -> tuple:
     # mode / engine / devmem_dram excluded: a DM/DC/DevMem (or
-    # engine-parity) sweep reuses one plan and its compiled form
+    # engine-parity) sweep reuses one plan and its compiled form.
+    # Fabric/host-link BANDWIDTH and hop latency are pricing-time knobs
+    # (excluded too — a bandwidth sweep reuses one plan); the fabric
+    # TOPOLOGY changes the collective hop decomposition, so it is part
+    # of the plan identity along with the tp/ep degrees.
     return (sc.model, sc.dtype, sc.seq, sc.batch, sc.n_layers,
-            sc.sampling, sc.sample_stride, sc.page_bytes, sc.params)
+            sc.sampling, sc.sample_stride, sc.page_bytes, sc.params,
+            sc.tp, sc.ep, MD.parse_fabric(sc.fabric).topology)
 
 
 def _decode_table(p: dict, np_dt: str):
@@ -777,9 +909,31 @@ def _merge_params(kind: str, defaults: dict, p: dict) -> dict:
     return {**defaults, **p}
 
 
+def _check_sharding(sc: Scenario, target: _Target):
+    """tp/ep degrees shard model-config stacks only, and only the
+    families whose blocks the partitioner understands."""
+    if sc.tp == 1 and sc.ep == 1:
+        return
+    if target.kind != "config":
+        raise UnsupportedScenario(
+            f"tp/ep sharding applies to model-config scenarios only, "
+            f"not the {target.kind!r} workload class")
+    cfg = target.config
+    if sc.tp > 1 and cfg.family in ("ssm", "hybrid"):
+        raise UnsupportedScenario(
+            f"tp>1 unsupported for family {cfg.family!r} "
+            f"({cfg.name!r}): the selective-scan state is not "
+            "head-partitionable in this lowering")
+    if sc.ep > 1 and cfg.family != "moe":
+        raise UnsupportedScenario(
+            f"ep>1 requires a MoE config; {cfg.name!r} has family "
+            f"{cfg.family!r}")
+
+
 def _build_plan(sc: Scenario, target: _Target):
     """Lower a (non-serve) scenario to its plan or schedule.  Returns
     (plan_or_schedule, label, events_replayed, events_total)."""
+    _check_sharding(sc, target)
     exact = sc.sampling == "exact"
     ss = sc.sample_stride
     p = {**sc.param_dict()}
@@ -791,9 +945,16 @@ def _build_plan(sc: Scenario, target: _Target):
         cfg = target.config
         S = (sc.seq or target.default_seq) * sc.batch
         n_layers = sc.n_layers or cfg.n_layers
-        stack = _config_stack(cfg, S, sc.dtype, n_layers, ss,
-                              sc.page_bytes)
-        plan = _stack_plan(cfg.name, stack, exact)
+        global _SHARD
+        saved = _SHARD
+        _SHARD = _Shard(sc.tp, sc.ep,
+                        MD.parse_fabric(sc.fabric).topology)
+        try:
+            stack = _config_stack(cfg, S, sc.dtype, n_layers, ss,
+                                  sc.page_bytes)
+            plan = _stack_plan(cfg.name, stack, exact)
+        finally:
+            _SHARD = saved
     elif target.kind == "gemm":
         from repro.core.streaming import tile_counts
         sh = _merge_params("gemm", dict(m=1024, n=1024, k=1024), p)
@@ -936,7 +1097,11 @@ def system_for(sc: Scenario):
     from repro.accesys.system import default_system
     dtype = "fp16" if resolve(sc.model).kind == "serve" else sc.dtype
     dram = DRAM(sc.devmem_dram) if sc.mode == "DevMem" else None
-    cfg = default_system(sc.mode, dtype=dtype, dram=dram)
+    from repro.accesys.system import pcie_for_bw
+    pcie = pcie_for_bw(sc.pcie_gb_s) if sc.pcie_gb_s is not None \
+        else None
+    cfg = default_system(sc.mode, dtype=dtype, pcie=pcie, dram=dram)
+    cfg.fabric = MD.parse_fabric(sc.fabric)
     if sc.page_bytes != cfg.page_bytes:
         cfg.page_bytes = sc.page_bytes
         cfg.llc = dataclasses.replace(cfg.llc,
@@ -950,6 +1115,7 @@ def scenario_plan(sc: Scenario):
     repeat-1 schedule."""
     target = resolve(sc.model)
     if target.kind == "serve":
+        _check_sharding(sc, target)
         _, sched = _serve_trace(sc)
         return sched, sched.name, sched.sampled_events, \
             sched.sampled_events
@@ -1006,6 +1172,7 @@ def simulate(sc: Scenario, *,
     engine = None if sc.engine == "auto" else sc.engine
     target = resolve(sc.model)
     if target.kind == "serve":
+        _check_sharding(sc, target)
         return _simulate_serve(sc, engine, host_s_per_elem)
     from repro.accesys.pipeline import HOST_S_PER_ELEM, replay
     plan, label, replayed, total = _plan_for(sc, target)
@@ -1022,11 +1189,18 @@ def simulate(sc: Scenario, *,
 
 
 def sweep(scenarios: Sequence[Scenario], *,
-          host_s_per_elem: Optional[float] = None) -> list:
+          host_s_per_elem: Optional[float] = None,
+          tp_degrees: Optional[Sequence[int]] = None) -> list:
     """Simulate many scenarios.  Scenarios that differ only in memory
-    mode / engine / DevMem DRAM share one lowered plan (and its
-    compiled form and trace-intrinsic LRU analysis) through the plan
-    cache — the paper's design-space sweeps in one call."""
+    mode / engine / DevMem DRAM (or fabric/host-link bandwidth) share
+    one lowered plan (and its compiled form and trace-intrinsic LRU
+    analysis) through the plan cache — the paper's design-space sweeps
+    in one call.  ``tp_degrees`` crosses every scenario with a list of
+    tensor-parallel degrees (the TP-degree axis of the multi-device
+    sweep)."""
+    if tp_degrees:
+        scenarios = [dataclasses.replace(sc, tp=tp)
+                     for sc in scenarios for tp in tp_degrees]
     return [simulate(sc, host_s_per_elem=host_s_per_elem)
             for sc in scenarios]
 

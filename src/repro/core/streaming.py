@@ -273,6 +273,11 @@ def execute_plan(plan: P.StreamPlan, tensors: dict, mode: MemoryMode,
                                res if "outs" in m else (res,)):
                 mats[name] = np.asarray(r)
                 produced.add(name)
+        elif ev.kind is P.EventKind.COLLECTIVE:
+            # inter-device exchange hop: timing-only (the single-rank
+            # functional executor already holds every rank's data; the
+            # replayer prices the fabric crossing)
+            continue
         else:                       # DMA_OUT: drain one accumulated tile
             if not isinstance(ev.page[1], tuple):
                 raise NotImplementedError(

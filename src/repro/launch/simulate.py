@@ -226,6 +226,20 @@ def main(argv=None) -> int:
                          "of the full grid (seeded, deterministic)")
     ap.add_argument("--devmem-dram", default="HBM2",
                     help="DRAM tech for DevMem mode (paper Fig. 12)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard heads/FFN over "
+                         "N ranks with all-gather/reduce-scatter at "
+                         "the Megatron cut points (config models only)")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-parallel degree: shard MoE experts "
+                         "over N ranks with all-to-all dispatch/combine")
+    ap.add_argument("--fabric", default="ring",
+                    metavar="TOPO[:GBS[:HOP_NS]]",
+                    help="inter-accelerator fabric, e.g. 'ring', "
+                         "'alltoall', 'ring:64', 'ring:64:800' "
+                         "(topology, link GB/s, per-hop latency)")
+    ap.add_argument("--pcie-gb-s", type=float, default=None,
+                    help="override the host link's raw bandwidth (GB/s)")
     ap.add_argument("--arrivals", default=None,
                     choices=["poisson", "bursty", "diurnal"],
                     help="serve only: open-loop load sweep with this "
@@ -300,14 +314,19 @@ def main(argv=None) -> int:
         if args.stall_budget_us < 0:
             ap.error("--stall-budget-us must be >= 0")
         return _run_load_sweep(args)
-    sc = Scenario(model=name, dtype=args.dtype, seq=args.seq,
-                  n_layers=args.layers,
-                  sampling="exact" if args.exact else "sampled",
-                  sample_stride=args.sample_stride,
-                  devmem_dram=args.devmem_dram, params=params)
-    if args.tune:
-        return _run_tune(sc, args.tune_points)
-    _run_modes(sc, args.modes, args.engine)
+    try:
+        sc = Scenario(model=name, dtype=args.dtype, seq=args.seq,
+                      n_layers=args.layers,
+                      sampling="exact" if args.exact else "sampled",
+                      sample_stride=args.sample_stride,
+                      devmem_dram=args.devmem_dram, params=params,
+                      tp=args.tp, ep=args.ep, fabric=args.fabric,
+                      pcie_gb_s=args.pcie_gb_s)
+        if args.tune:
+            return _run_tune(sc, args.tune_points)
+        _run_modes(sc, args.modes, args.engine)
+    except UnsupportedScenario as e:
+        ap.error(str(e))
     return 0
 
 

@@ -90,7 +90,7 @@ def test_composed_multilayer_replay_has_fig2_buckets(mode, dram):
     r = replay(cfg, plan)
     b = r.buckets()
     assert set(b) == {"descriptor", "translation", "transfer",
-                      "compute", "drain", "host"}
+                      "compute", "drain", "host", "collective"}
     assert r.total_s > 0 and r.compute_s > 0 and r.host_s > 0
     assert all(v >= 0 for v in b.values())
 

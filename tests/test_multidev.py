@@ -1,0 +1,340 @@
+"""Multi-device sharded plans (``core.multidev`` + the Scenario tp/ep
+lowering): fabric parsing, partitioner agreement with
+``sharding.logical.spec_for``, ring/crossbar collective volume
+conservation, coupled N-rank replay, the tp=1/ep=1 bitwise-degeneracy
+guard, and collective-aware serving attribution identities."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.accesys.components import DRAM, Fabric
+from repro.accesys.pipeline import replay, replay_compiled
+from repro.accesys.system import default_system
+from repro.core import multidev as MD
+from repro.core import plan as P
+from repro.core import scenario as SC
+from repro.core.scenario import Scenario, UnsupportedScenario, simulate
+from repro.sharding import logical
+
+MODES = ("DM", "DC", "DevMem")
+
+
+def _system(mode):
+    return default_system(mode, dram=DRAM("HBM2")
+                          if mode == "DevMem" else None)
+
+
+# ------------------------------------------------------------- fabric
+def test_parse_fabric_forms():
+    f = MD.parse_fabric("ring")
+    assert f.topology == "ring" and f.hop_latency_ns == \
+        Fabric().hop_latency_ns
+    f = MD.parse_fabric("alltoall:64")
+    assert f.topology == "alltoall"
+    # raw 64 GB/s minus TLP header overhead: effective is ~0.9x raw
+    assert 0.85 * 64e9 < f.link.effective_bw < 64e9
+    f = MD.parse_fabric("ring:16:800")
+    assert f.hop_latency_ns == 800.0
+    assert MD.parse_fabric(Fabric(topology="alltoall")).topology == \
+        "alltoall"
+    with pytest.raises(ValueError):
+        MD.parse_fabric("mesh")
+
+
+def test_fabric_hop_time_is_link_plus_latency():
+    f = MD.parse_fabric("ring:16:500")
+    assert f.hop_time(1 << 20) == pytest.approx(
+        (1 << 20) / f.link.effective_bw + 500e-9)
+
+
+# --------------------------- partitioner == logical rule table (sat 2)
+@pytest.mark.parametrize("name,size,p", [
+    (name, size, p)
+    for name in ("heads", "kv_heads", "mlp", "expert", "qkv", "vocab",
+                 "head_dim", "embed_act")
+    for size, p in ((64, 8), (60, 8), (7, 7), (128, 3), (256, 2))])
+def test_tp_split_matches_spec_for(name, size, p):
+    """Plan-level sharding decisions must be EXACTLY ``spec_for``'s:
+    shard iff the rule table maps the dim to the model axis and the
+    size divides — never a padded shard, never a private rule."""
+    rules = logical.make_rules(multi_pod=False)
+    spec = logical.spec_for((name,), (size,), rules, {"model": p})
+    entry = spec[0]
+    claimed = entry is not None and "model" in (
+        entry if isinstance(entry, tuple) else (entry,))
+    got = MD.tp_split(size, name, p)
+    if claimed:
+        assert got == size // p
+        assert got * p == size        # exact: no silent padding
+    else:
+        assert got is None
+
+
+def test_tp_shard_plan_replicates_indivisible():
+    sh = MD.tp_shard_plan(8, heads=32, kv_heads=4, mlp=11008,
+                          head_dim=128)
+    assert sh["heads"] == (4, True)
+    assert sh["kv_heads"] == (4, False)      # 4 % 8 != 0: replicated
+    assert sh["mlp"] == (1376, True)
+    assert sh["head_dim"] == (128, False)    # rule table: never sharded
+
+
+def test_ep_shard_plan_divides_or_raises():
+    assert MD.ep_shard_plan(8, 64) == 8
+    assert MD.ep_shard_plan(1, 7) == 7
+    with pytest.raises(ValueError):
+        MD.ep_shard_plan(6, 64)
+
+
+# --------------------------- collective volume conservation (sat 3)
+def test_ring_collective_moves_p_minus_1_over_p():
+    """Ring AG/RS volume: each rank forwards p-1 hops of one shard —
+    exactly (p-1)/p of the gathered tensor."""
+    shard, p = 4096, 8
+    for builder in (MD.ag_plan, MD.rs_plan):
+        pl = builder(shard, p, "ring", "int8")
+        c = pl.counts()
+        assert c["collectives"] == p - 1
+        assert c["collective_bytes"] == (p - 1) * shard
+        assert c["collective_bytes"] == (p - 1) / p * (shard * p)
+
+
+def test_alltoall_same_bytes_fewer_hops():
+    shard, p = 4096, 8
+    ring = MD.ag_plan(shard, p, "ring", "int8").counts()
+    xbar = MD.ag_plan(shard, p, "alltoall", "int8").counts()
+    assert ring["collective_bytes"] == xbar["collective_bytes"]
+    assert xbar["collectives"] == 1 and ring["collectives"] == p - 1
+
+
+def test_a2a_dispatch_equals_combine_bytes():
+    shard, p = 2048, 4
+    d = MD.a2a_plan(shard, p, "ring", "int8", op="a2a_dispatch")
+    c = MD.a2a_plan(shard, p, "ring", "int8", op="a2a_combine")
+    assert d.counts()["collective_bytes"] == \
+        c.counts()["collective_bytes"]
+    assert {ev.op for ev in d.events} == {"a2a_dispatch"}
+
+
+def test_degree_one_collectives_are_none():
+    assert MD.ag_plan(4096, 1, "ring", "int8") is None
+    assert MD.rs_plan(0, 8, "ring", "int8") is None
+    assert MD.a2a_plan(4096, 1, "alltoall", "int8") is None
+
+
+# ------------------------------------------- collective hop pricing
+@pytest.mark.parametrize("mode", MODES)
+def test_collective_priced_on_fabric_not_host_link(mode):
+    """coll_s is analytic hop time on the FABRIC link and engine
+    parity holds; the host-link knob must not touch it."""
+    gemm = P.gemm_plan(256, 256, 256, "int8")
+    coll = MD.ag_plan(4096, 4, "ring", "int8")
+    plan = P.concat([gemm, coll], name="g+ag")
+    cfg = _system(mode)
+    r_ev = replay(cfg, plan, engine="event")
+    r_cp = replay(cfg, plan, engine="compiled")
+    f = cfg.fabric
+    want = 3 * (4096 / f.link.effective_bw + f.hop_latency_ns * 1e-9)
+    assert r_ev.coll_s == pytest.approx(want, rel=1e-12)
+    assert r_cp.coll_s == pytest.approx(r_ev.coll_s, rel=1e-9)
+    assert r_cp.total_s == pytest.approx(r_ev.total_s, rel=1e-9)
+    # fabric bandwidth moves coll_s only; compute/transfer untouched
+    fast = _system(mode)
+    fast.fabric = MD.parse_fabric("ring:256")
+    r_fast = replay(fast, plan, engine="compiled")
+    assert r_fast.coll_s < r_cp.coll_s
+    assert r_fast.compute_s == r_cp.compute_s
+    assert r_fast.transfer_s == r_cp.transfer_s
+
+
+# ------------------------------------------------ coupled N-rank replay
+def _rank_plan(n, tag):
+    g = P.gemm_plan(n, n, n, "int8", a=f"{tag}a", b=f"{tag}b",
+                    c=f"{tag}c")
+    coll = MD.rs_plan(2048, 4, "ring", "int8", name=f"{tag}rs")
+    g2 = P.gemm_plan(n, n, n, "int8", a=f"{tag}c", b=f"{tag}b2",
+                     c=f"{tag}d")
+    return P.concat([g, coll, g2], name=f"{tag}step")
+
+
+def test_replay_multidev_symmetric_is_bitwise_solo():
+    """Symmetric ranks never bind the barrier: every rank's coupled
+    result is BITWISE the solo compiled replay of its own plan — the
+    property that lets Scenario price one rank for the whole group."""
+    plan = _rank_plan(128, "")
+    cfg = _system("DC")
+    solo = replay_compiled(cfg, plan, _recur="loop")
+    ranks = MD.replay_multidev(cfg, [plan, plan, plan])
+    for r in ranks:
+        for f in dataclasses.fields(solo):
+            assert getattr(r, f.name) == getattr(solo, f.name), f.name
+
+
+def test_replay_multidev_asymmetric_barrier_drags():
+    cfg = _system("DC")
+    slow, fast = _rank_plan(192, "s."), _rank_plan(96, "f.")
+    solo_fast = replay_compiled(cfg, fast, _recur="loop")
+    r_slow, r_fast = MD.replay_multidev(cfg, [slow, fast])
+    assert r_fast.total_s > solo_fast.total_s      # waited at barrier
+    assert r_slow.total_s == pytest.approx(
+        replay_compiled(cfg, slow, _recur="loop").total_s, rel=1e-9)
+
+
+def test_replay_multidev_collective_count_mismatch_raises():
+    cfg = _system("DC")
+    with_coll = _rank_plan(96, "a.")
+    without = P.gemm_plan(96, 96, 96, "int8")
+    with pytest.raises(ValueError):
+        MD.replay_multidev(cfg, [with_coll, without])
+
+
+def test_rank_instances_disjoint_pages_shared_trace():
+    plan = _rank_plan(96, "")
+    insts = MD.rank_instances(plan, 3)
+    assert len(insts) == 3
+    assert insts[1].trace_ids is insts[0].trace_ids
+    keys = [set(cp.page_keys) for cp in insts]
+    assert not (keys[0] & keys[1]) and not (keys[1] & keys[2])
+
+
+# --------------------------- tp=1/ep=1 bitwise degeneracy (sat 1)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("sampling", ("sampled", "exact"))
+def test_tp1_ep1_bitwise_identical_dense(mode, sampling):
+    base = Scenario(model="qwen2-0.5b-reduced", seq=32, mode=mode,
+                    sampling=sampling)
+    SC.clear_caches()
+    a = simulate(base)
+    SC.clear_caches()               # force a fresh lowering
+    b = simulate(dataclasses.replace(base, tp=1, ep=1))
+    for f in dataclasses.fields(a.result):
+        assert getattr(a.result, f.name) == \
+            getattr(b.result, f.name), f.name
+
+
+def test_tp1_ep1_bitwise_identical_moe():
+    base = Scenario(model="qwen2-moe-a2.7b-reduced", seq=32,
+                    sampling="exact")
+    SC.clear_caches()
+    a = simulate(base)
+    SC.clear_caches()
+    b = simulate(dataclasses.replace(base, tp=1, ep=1))
+    for f in dataclasses.fields(a.result):
+        assert getattr(a.result, f.name) == \
+            getattr(b.result, f.name), f.name
+    assert a.result.coll_s == 0.0
+
+
+# --------------------------- plan-level sharding == spec_for (sat 2)
+def test_indivisible_tp_degree_replicates_whole_stack():
+    """qwen2-0.5b-reduced has 4 heads / d_ff 128: tp=3 divides
+    neither, so spec_for replicates everything — the sharded plan must
+    be the unsharded plan (no collectives, identical pricing), not a
+    padded shard."""
+    SC.clear_caches()
+    a = simulate(Scenario(model="qwen2-0.5b-reduced", seq=32))
+    SC.clear_caches()
+    b = simulate(Scenario(model="qwen2-0.5b-reduced", seq=32, tp=3))
+    assert b.result.coll_s == 0.0
+    assert b.result.total_s == a.result.total_s
+    assert b.result.macs == a.result.macs
+
+
+def test_tp2_shards_and_inserts_megatron_collectives():
+    """tp=2 divides heads (4), kv heads (2) and d_ff (128): the exact
+    plan carries one AG + one RS per attention and per MLP block, each
+    moving the ring volume (p-1) * (S*d*elem/p)."""
+    sc = Scenario(model="qwen2-0.5b-reduced", seq=32, tp=2,
+                  sampling="exact")
+    plan, _, _, _ = SC.scenario_plan(sc)
+    c = plan.counts()
+    n_layers, S, d, p = 2, 32, 64, 2
+    per_coll = (p - 1) * (S * d * 1 // p)      # int8: 1 B/elem
+    assert c["collectives"] == n_layers * 4 * (p - 1)
+    assert c["collective_bytes"] == n_layers * 4 * per_coll
+    # and the sharded GEMMs really shrank: a rank holds half the macs
+    SC.clear_caches()
+    full = SC.scenario_plan(Scenario(model="qwen2-0.5b-reduced",
+                                     seq=32, sampling="exact"))[0]
+    assert plan.macs < full.macs
+
+
+def test_ep2_a2a_dispatch_equals_combine_in_plan():
+    """qwen2-moe-a2.7b-reduced at ep=2: per-rank experts halve and the
+    exact plan's a2a dispatch bytes equal its combine bytes."""
+    sc = Scenario(model="qwen2-moe-a2.7b-reduced", seq=32, ep=2,
+                  sampling="exact")
+    plan, _, _, _ = SC.scenario_plan(sc)
+    disp = sum(ev.nbytes for ev in plan.events
+               if ev.kind is P.EventKind.COLLECTIVE and
+               ev.op == "a2a_dispatch")
+    comb = sum(ev.nbytes for ev in plan.events
+               if ev.kind is P.EventKind.COLLECTIVE and
+               ev.op == "a2a_combine")
+    assert disp > 0 and disp == comb
+    # per-rank expert count halved: count distinct expert buffers
+    e_bufs = {t for t in plan.tensors if ".e" in t and
+              t.endswith(".buf")}
+    assert len(e_bufs) == 2 * (8 // 2)         # 2 layers x E/ep
+
+
+def test_ep_indivisible_raises_unsupported():
+    with pytest.raises((UnsupportedScenario, ValueError)):
+        simulate(Scenario(model="qwen2-moe-a2.7b-reduced", seq=32,
+                          ep=3))
+
+
+# --------------------------- serving attribution identities (sat 3)
+def test_serving_attribution_additive_with_collectives():
+    """Collective-bearing record plans flow through the serving
+    replayer untouched: per-event durations still sum to the total and
+    the per-request additive TTFT/e2e identities hold exactly."""
+    from repro.serving.engine import PlanRecord
+    from repro.serving.sim_report import simulate_serving_trace
+
+    def rec(kind, i, uid, plan, arrival=0):
+        return PlanRecord(kind=kind, step_idx=i, slots=(0,),
+                          uids=(uid,), plan=plan,
+                          arrival_event=arrival)
+
+    def sharded_step(tag):
+        g = P.gemm_plan(64, 64, 64, "int8", a=f"{tag}a", b=f"{tag}b",
+                        c=f"{tag}c")
+        ag = MD.ag_plan(1024, 4, "ring", "int8", name=f"{tag}ag")
+        return P.concat([ag, g], name=f"{tag}step")
+
+    trace = [rec("prefill", 0, 0, sharded_step("p0.")),
+             rec("decode", 1, 0, sharded_step("d0.")),
+             rec("prefill", 2, 1, sharded_step("p1."), arrival=1),
+             rec("decode", 3, 1, sharded_step("d1."))]
+    rep = simulate_serving_trace(_system("DC"), trace)
+    assert rep.result.coll_s > 0
+    assert float(np.sum(rep.per_event_s)) == pytest.approx(
+        rep.result.total_s, rel=1e-6)
+    for r in rep.requests:
+        assert r.ttft_s == pytest.approx(
+            r.queue_s + r.prefill_s + r.swap_pre_s, abs=1e-15)
+        assert r.e2e_s == pytest.approx(
+            r.ttft_s + r.decode_s + r.swap_post_s + r.stall_s,
+            abs=1e-12)
+
+
+# ------------------------------------------------------ sweep plumbing
+def test_sweep_tp_degrees_crosses_scenarios():
+    res = SC.sweep([Scenario(model="qwen2-0.5b-reduced", seq=32)],
+                   tp_degrees=[1, 2])
+    assert [r.scenario.tp for r in res] == [1, 2]
+    assert res[0].result.coll_s == 0.0
+    assert res[1].result.coll_s > 0.0
+
+
+def test_full_size_deepseek_tp8_ep8_prices():
+    """Acceptance: the full 671B deepseek-v3 config lowers and prices
+    end-to-end at tp=8 x ep=8 (sampled, strided)."""
+    res = simulate(Scenario(model="deepseek-v3-671b", seq=32, tp=8,
+                            ep=8, sample_stride=16,
+                            engine="compiled"))
+    assert res.total_s > 0
+    assert res.result.coll_s > 0
+    SC.clear_caches()               # full-size plans are order-100MB

@@ -155,7 +155,8 @@ def test_simresult_json_schema_stable():
                 "events_per_s", "serving", "sampling_error"):
         assert key in j, key
     assert set(j["buckets"]) == {"descriptor", "translation",
-                                 "transfer", "compute", "drain", "host"}
+                                 "transfer", "compute", "drain", "host",
+                                 "collective"}
     assert set(j["tlb"]) == {"lookups", "misses", "walks"}
     assert set(j["events"]) == {"replayed", "total", "speedup"}
     json.dumps(j)                      # round-trips
